@@ -1,0 +1,52 @@
+"""Paper Table IV + Table V: improvement of VDTuner over the Default setting,
+and the chosen index/parameters per dataset."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.vdms import make_space
+
+from .common import DATASETS, N_ITERS, emit, make_env, run_method
+
+
+def best_without_sacrifice(tuner, default_y):
+    """Paper's metric: max speed (recall) improvement without sacrificing the
+    other objective relative to the default configuration."""
+    Y = tuner.Y
+    spd_ok = Y[Y[:, 1] >= default_y[1] - 1e-9]
+    rec_ok = Y[Y[:, 0] >= default_y[0] - 1e-9]
+    spd_imp = (spd_ok[:, 0].max() / default_y[0] - 1) * 100 if len(spd_ok) else float("nan")
+    rec_imp = (rec_ok[:, 1].max() / default_y[1] - 1) * 100 if len(rec_ok) else float("nan")
+    return spd_imp, rec_imp
+
+
+def run(seed: int = 0):
+    space = make_space()
+    rows = {}
+    for ds in DATASETS:
+        env = make_env(ds, seed=seed)
+        default = env(space.default_config("AUTOINDEX"))
+        default_y = np.array([default["speed"], default["recall"]])
+        tuner, wall = run_method("vdtuner", env, space, N_ITERS, seed=seed)
+        spd_imp, rec_imp = best_without_sacrifice(tuner, default_y)
+        best = max(
+            (o for o in tuner.history if not o.failed),
+            key=lambda o: o.y[0] * (o.y[1] >= default_y[1]),
+        )
+        rows[ds] = dict(
+            speed_improvement_pct=spd_imp, recall_improvement_pct=rec_imp,
+            best_index=best.index_type,
+            best_config={k: v for k, v in best.config.items()
+                         if k in ("nlist", "nprobe", "m", "nbits", "M",
+                                  "efConstruction", "ef", "reorder_k")},
+            wall_s=wall,
+        )
+        emit(
+            f"autoconfig/{ds}", wall * 1e6 / N_ITERS,
+            f"speed_imp={spd_imp:.1f}%;recall_imp={rec_imp:.1f}%;best={best.index_type}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,64 @@
+"""Paper Fig. 6 + Fig. 7: best search speed at recall floors per method, and
+samples/time needed to reach the most-competitive-baseline quality."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.vdms import make_space
+
+from .common import DATASETS, N_ITERS, RECALL_FLOORS, emit, make_env, run_method
+
+METHODS = ("vdtuner", "random_lhs", "ottertune", "qehvi", "opentuner")
+
+
+def speed_at_floors(tuner):
+    return {r: tuner.best_speed_at_recall(r) for r in RECALL_FLOORS}
+
+
+def iters_to_reach(tuner, floor: float, target_speed: float):
+    best = -np.inf
+    for o in tuner.history:
+        if not o.failed and o.y[1] >= floor:
+            best = max(best, o.y[0])
+        if best >= target_speed:
+            return o.iteration + 1
+    return None
+
+
+def run(seed: int = 0, datasets=DATASETS):
+    space = make_space()
+    out = {}
+    for ds in datasets:
+        env = make_env(ds, seed=seed)
+        results, walls = {}, {}
+        for m in METHODS:
+            tuner, wall = run_method(m, env, space, N_ITERS, seed=seed)
+            results[m] = tuner
+            walls[m] = wall
+        table = {m: speed_at_floors(t) for m, t in results.items()}
+        # tuning efficiency (Fig. 7): iterations for vdtuner to match the most
+        # competitive baseline at each floor
+        eff = {}
+        for r in RECALL_FLOORS:
+            base_best = max(
+                (table[m][r] for m in METHODS if m != "vdtuner" and np.isfinite(table[m][r])),
+                default=float("nan"),
+            )
+            eff[r] = iters_to_reach(results["vdtuner"], r, base_best)
+        # trade-off ability (std of speeds across floors; lower = better)
+        tradeoff = {
+            m: float(np.nanstd([table[m][r] for r in RECALL_FLOORS])) for m in METHODS
+        }
+        out[ds] = {"speed_at_floor": table, "iters_to_match_best_baseline": eff,
+                   "tradeoff_std": tradeoff, "wall_s": walls}
+        for m in METHODS:
+            vals = ";".join(
+                f"r{r}={table[m][r]:.0f}" if np.isfinite(table[m][r]) else f"r{r}=nan"
+                for r in (0.85, 0.95, 0.99)
+            )
+            emit(f"efficiency/{ds}/{m}", walls[m] * 1e6 / N_ITERS, vals)
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks (XLA path wall-time on this host + interpret-mode
+correctness deltas) and dry-run roofline summary if artifacts exist."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import emit
+
+
+def _time(fn, *args, repeats=5):
+    fn(*args).block_until_ready() if hasattr(fn(*args), "block_until_ready") else None
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def run():
+    rng = np.random.default_rng(0)
+    out = {}
+    # distance
+    q = jnp.asarray(rng.standard_normal((128, 96)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((8192, 96)), jnp.float32)
+    t = _time(lambda a, b: ops.batched_ip(a, b, impl="xla"), q, x)
+    flops = 2 * 128 * 8192 * 96
+    emit("kernel/distance_ip_128x8192x96", t * 1e6, f"gflops={flops/t/1e9:.1f}")
+    out["distance"] = t
+    # pq adc
+    lut = jnp.asarray(rng.standard_normal((128, 8, 256)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 256, (8192, 8)), jnp.int32)
+    t = _time(lambda a, b: ops.pq_adc(a, b, impl="xla"), lut, codes)
+    emit("kernel/pq_adc_128x8192x8x256", t * 1e6, f"lookups_per_s={128*8192*8/t:.2e}")
+    out["pq_adc"] = t
+    # flash attention fwd
+    qq = jnp.asarray(rng.standard_normal((1, 1024, 8, 64)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((1, 1024, 4, 64)), jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((1, 1024, 4, 64)), jnp.float32)
+    t = _time(lambda a, b, c: ops.flash_attention(a, b, c, causal=True, impl="xla"), qq, kk, vv)
+    emit("kernel/flash_fwd_b1_s1024_h8_d64", t * 1e6, f"causal_gqa")
+    out["flash"] = t
+    # roofline summary from dry-run artifacts
+    d = Path("experiments/dryrun")
+    if d.exists():
+        worst, bound_counts = None, {}
+        for f in sorted(d.glob("*_256.json")):
+            r = json.loads(f.read_text())
+            if "skipped" in r or "bottleneck" not in r:
+                continue
+            bound_counts[r["bottleneck"]] = bound_counts.get(r["bottleneck"], 0) + 1
+            frac = r.get("roofline_fraction", 0)
+            if worst is None or frac < worst[1]:
+                worst = (f.stem, frac)
+        if worst:
+            emit("roofline/summary", 0.0,
+                 f"bounds={bound_counts};worst={worst[0]}@{worst[1]:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Table VI: tuning-time breakdown (configuration recommendation vs
+workload replay) per method."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.vdms import make_space
+
+from .common import N_ITERS, emit, make_env, run_method
+
+METHODS = ("vdtuner", "random_lhs", "ottertune", "qehvi", "opentuner")
+
+
+def run(seed: int = 0, dataset: str = "glove_like"):
+    space = make_space()
+    out = {}
+    for m in METHODS:
+        env = make_env(dataset, seed=seed)
+        tuner, wall = run_method(m, env, space, N_ITERS, seed=seed)
+        rec = sum(o.recommend_time for o in tuner.history)
+        replay = sum(o.eval_time for o in tuner.history)
+        out[m] = {
+            "recommend_s": rec, "replay_s": replay, "total_s": wall,
+            "recommend_pct": 100 * rec / max(wall, 1e-9),
+        }
+        emit(f"overhead/{m}", wall * 1e6 / N_ITERS,
+             f"rec={rec:.1f}s({100*rec/max(wall,1e-9):.2f}%);replay={replay:.1f}s")
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

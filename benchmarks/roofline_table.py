@@ -1,0 +1,73 @@
+"""Build the EXPERIMENTS.md §Roofline table from dry-run artifacts."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(v):
+    if v >= 1.0:
+        return f"{v:.2f}s"
+    if v >= 1e-3:
+        return f"{v*1e3:.2f}ms"
+    return f"{v*1e6:.1f}us"
+
+
+def load(d="experiments/dryrun", chips="256"):
+    rows = []
+    for f in sorted(Path(d).glob(f"*_{chips}.json")):
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def markdown_table(d="experiments/dryrun", chips="256") -> str:
+    rows = load(d, chips)
+    by_key = {}
+    for r in rows:
+        by_key[(r["arch"], r["shape"])] = r
+    lines = [
+        "| arch | shape | compute | memory | collective | bound | useful (6ND/HLO) | roofline frac | temp/dev |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    archs = sorted({k[0] for k in by_key})
+    for arch in archs:
+        for shape in ORDER:
+            r = by_key.get((arch, shape))
+            if r is None:
+                continue
+            if "skipped" in r:
+                lines.append(f"| {arch} | {shape} | — | — | — | SKIP: {r['skipped'][:42]} | | | |")
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                f"| {fmt_s(r['collective_s'])} | {r['bottleneck']} "
+                f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+                f"| {r['memory_analysis']['temp_size_in_bytes']/2**30:.1f} GiB |"
+            )
+    return "\n".join(lines)
+
+
+def multipod_table(d="experiments/dryrun") -> str:
+    rows = load(d, "512")
+    lines = [
+        "| arch | shape | compiled | temp/dev | fallbacks |",
+        "|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | yes "
+            f"| {r['memory_analysis']['temp_size_in_bytes']/2**30:.1f} GiB "
+            f"| {', '.join(r.get('fallbacks', [])) or '—'} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())
+    print()
+    print(multipod_table())

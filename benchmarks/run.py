@@ -1,0 +1,48 @@
+# One module per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+#
+#   Table IV/V -> bench_autoconfig     Fig. 6/7  -> bench_efficiency
+#   Fig. 8-10  -> bench_ablation       Fig. 12   -> bench_preference
+#   Fig. 13    -> bench_costaware      Table VI  -> bench_overhead
+#   kernels + roofline summary         -> bench_kernels
+#
+# REPRO_BENCH_FULL=1 scales to paper-size runs (200 iterations, wall-clock
+# QPS at 32k vectors); the default is a fast deterministic configuration.
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (
+        bench_ablation, bench_autoconfig, bench_costaware, bench_efficiency,
+        bench_kernels, bench_overhead, bench_preference,
+    )
+
+    print("name,us_per_call,derived")
+    suites = [
+        ("kernels", bench_kernels.run, {}),
+        ("autoconfig(TabIV/V)", bench_autoconfig.run, {}),
+        ("efficiency(Fig6/7)", bench_efficiency.run, {"datasets": ("glove_like",)}),
+        ("ablation(Fig8-10)", bench_ablation.run, {}),
+        ("preference(Fig12)", bench_preference.run, {}),
+        ("costaware(Fig13)", bench_costaware.run, {}),
+        ("overhead(TabVI)", bench_overhead.run, {}),
+    ]
+    failures = 0
+    for name, fn, kw in suites:
+        t0 = time.time()
+        try:
+            fn(**kw)
+            print(f"# suite {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures += 1
+            print(f"# suite {name} FAILED", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

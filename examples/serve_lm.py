@@ -1,0 +1,26 @@
+"""Batched serving example: prefill a batch of prompts on a GQA transformer
+and decode tokens against the KV cache.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch glm4-9b --gen 48
+"""
+import argparse
+
+from repro.launch.serve import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    out = run(args.arch, smoke=True, batch=args.batch,
+              prompt_len=args.prompt_len, gen=args.gen)
+    print(f"prefill: {out['prefill_s']*1e3:.0f} ms for batch={args.batch} x {args.prompt_len} tokens")
+    print(f"decode : {out['decode_tokens_per_s']:.1f} tokens/s over {args.gen} steps")
+    print(f"sample token ids: {out['tokens'][0][:12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

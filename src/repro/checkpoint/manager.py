@@ -1,0 +1,166 @@
+"""Mesh-agnostic, atomic, fault-tolerant checkpointing.
+
+Design goals (the large-scale runnability story):
+* **Atomic**: write to a temp dir, fsync, then rename — a crash mid-save never
+  corrupts the latest checkpoint.
+* **Mesh-agnostic / elastic**: arrays are saved as full logical arrays plus a
+  manifest; on restore they are placed under the *new* mesh's shardings, so a
+  job may resume with a different pod count / DP width.
+* **Self-verifying**: the manifest stores a checksum per array; restore
+  validates and falls back to the previous step on corruption.
+* **Async**: `save(..., blocking=False)` snapshots to host then writes in a
+  background thread so the train loop keeps stepping.
+* **Bounded**: keeps the newest `keep` checkpoints.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else f"[{p.idx}]" if hasattr(p, "idx") else str(p)
+            for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype == jax.numpy.bfloat16:
+            flat[key + "::bf16"] = arr.view(np.uint16)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def _checksum(arr: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(arr).tobytes()[:1_000_000]).hexdigest()[:16]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str | os.PathLike, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> Path:
+        return self.dir / f"step_{step:010d}"
+
+    def all_steps(self):
+        out = []
+        for d in sorted(self.dir.glob("step_*")):
+            if (d / "MANIFEST.json").exists():
+                out.append(int(d.name.split("_")[1]))
+        return out
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+    def _write(self, step: int, flat: Dict[str, np.ndarray], extra: Dict):
+        tmp = self.dir / f".tmp_step_{step:010d}_{os.getpid()}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest = {"step": step, "time": time.time(), "extra": extra, "arrays": {}}
+        np.savez(tmp / "arrays.npz", **flat)
+        for k, v in flat.items():
+            manifest["arrays"][k] = {
+                "shape": list(v.shape),
+                "dtype": str(v.dtype),
+                "checksum": _checksum(v),
+            }
+        with open(tmp / "MANIFEST.json", "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        final = self._step_dir(step)
+        if final.exists():
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None, blocking: bool = True):
+        """Snapshot `tree` (device -> host) and persist it."""
+        self.wait()  # one in-flight async save at a time
+        flat = _flatten(tree)  # host copy happens here
+        if blocking:
+            self._write(step, flat, extra or {})
+        else:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, flat, extra or {}), daemon=True
+            )
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def restore(
+        self,
+        like: Any,
+        step: Optional[int] = None,
+        shardings: Optional[Any] = None,
+    ) -> Tuple[Any, Dict]:
+        """Restore into the structure of `like` (a pytree of arrays or
+        ShapeDtypeStructs). If `shardings` (matching pytree of NamedSharding)
+        is given, arrays are placed under the NEW mesh — elastic restart."""
+        self.wait()
+        candidates = self.all_steps() if step is None else [step]
+        last_err: Optional[Exception] = None
+        for s in reversed(candidates):
+            try:
+                return self._restore_step(s, like, shardings)
+            except Exception as e:  # corrupted -> try previous
+                last_err = e
+                continue
+        raise FileNotFoundError(f"no restorable checkpoint in {self.dir}: {last_err}")
+
+    def _restore_step(self, step: int, like: Any, shardings) -> Tuple[Any, Dict]:
+        d = self._step_dir(step)
+        manifest = json.loads((d / "MANIFEST.json").read_text())
+        data = np.load(d / "arrays.npz")
+        leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+        shard_leaves = (
+            jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+        )
+        out = []
+        for i, (path, leaf) in enumerate(leaves_like):
+            key = "/".join(
+                str(p.key) if hasattr(p, "key") else f"[{p.idx}]" if hasattr(p, "idx") else str(p)
+                for p in path
+            )
+            stored_key = key + "::bf16" if key + "::bf16" in data else key
+            arr = data[stored_key]
+            meta = manifest["arrays"][stored_key]
+            if _checksum(arr) != meta["checksum"]:
+                raise IOError(f"checksum mismatch for {key} at step {step}")
+            if stored_key.endswith("::bf16"):
+                arr = arr.view(jax.numpy.bfloat16)
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+            if shard_leaves is not None and shard_leaves[i] is not None:
+                out.append(jax.device_put(arr, shard_leaves[i]))
+            else:
+                out.append(jax.numpy.asarray(arr))
+        return treedef.unflatten(out), manifest.get("extra", {})

@@ -1,0 +1,10 @@
+"""Assigned architecture configs + shape suites."""
+from .base import (
+    SHAPES, ArchConfig, ShapeConfig, get_arch, input_specs, list_archs,
+    reduce, register, shape_applicable,
+)
+
+__all__ = [
+    "SHAPES", "ArchConfig", "ShapeConfig", "get_arch", "input_specs",
+    "list_archs", "reduce", "register", "shape_applicable",
+]

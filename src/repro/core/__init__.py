@@ -1,0 +1,18 @@
+"""VDTuner core: multi-objective Bayesian optimization for system tuning."""
+from .acquisition import cei, ehvi_mc, ei
+from .baselines import ALL_BASELINES, DefaultOnly, OpenTunerLike, OtterTuneLike, QEHVI, RandomLHS
+from .budget import SuccessiveAbandon, scores_by_hv_influence
+from .gp import GP
+from .hypervolume import hv_2d, hvi_2d
+from .normalize import balanced_base, max_base, npi_normalize
+from .pareto import non_dominated_mask, pareto_front
+from .space import Config, Param, SearchSpace
+from .tuner import Observation, TunerBase, TuningFailure, VDTuner, cost_aware_transform
+
+__all__ = [
+    "ALL_BASELINES", "Config", "DefaultOnly", "GP", "Observation", "OpenTunerLike",
+    "OtterTuneLike", "Param", "QEHVI", "RandomLHS", "SearchSpace", "SuccessiveAbandon",
+    "TunerBase", "TuningFailure", "VDTuner", "balanced_base", "cei", "cost_aware_transform",
+    "ehvi_mc", "ei", "hv_2d", "hvi_2d", "max_base", "non_dominated_mask", "npi_normalize",
+    "pareto_front", "scores_by_hv_influence",
+]

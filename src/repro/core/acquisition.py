@@ -1,0 +1,69 @@
+"""Acquisition functions: MC-EHVI (Eq. 4), EI, and constrained EI (Eq. 7)."""
+from __future__ import annotations
+
+import math as _math
+
+import numpy as np
+
+from .hypervolume import hvi_2d
+
+_erf_vec = np.frompyfunc(_math.erf, 1, 1)
+
+
+def _erf(x: np.ndarray) -> np.ndarray:
+    return _erf_vec(x).astype(np.float64)
+
+
+def _phi(z: np.ndarray) -> np.ndarray:
+    """Standard normal pdf."""
+    return np.exp(-0.5 * z * z) / np.sqrt(2.0 * np.pi)
+
+
+def _Phi(z: np.ndarray) -> np.ndarray:
+    """Standard normal cdf via erf (vectorized, no scipy dependency)."""
+    return 0.5 * (1.0 + _erf(np.asarray(z, np.float64) / np.sqrt(2.0)))
+
+
+def ehvi_mc(
+    mean: np.ndarray,
+    std: np.ndarray,
+    front: np.ndarray,
+    ref: np.ndarray,
+    rng: np.random.Generator,
+    n_samples: int = 64,
+) -> np.ndarray:
+    """Monte-Carlo EHVI for `c` candidates with independent-normal posteriors.
+
+    mean/std: (c, 2); front: (k, 2) current non-dominated set; ref: (2,).
+    Returns (c,) expected exclusive hypervolume improvement (paper Eq. 4,
+    estimated by Monte-Carlo integration as in qEHVI [24]).
+    """
+    c = mean.shape[0]
+    eps = rng.standard_normal((n_samples, c, 2))
+    samples = mean[None] + std[None] * eps  # (S, c, 2)
+    flat = samples.reshape(-1, 2)
+    hvi = hvi_2d(flat, front, ref).reshape(n_samples, c)
+    return hvi.mean(axis=0)
+
+
+def ei(mean: np.ndarray, std: np.ndarray, best: float) -> np.ndarray:
+    """Closed-form expected improvement (maximization)."""
+    std = np.maximum(std, 1e-12)
+    z = (mean - best) / std
+    return (mean - best) * _Phi(z) + std * _phi(z)
+
+
+def cei(
+    mean_spd: np.ndarray,
+    std_spd: np.ndarray,
+    mean_rec: np.ndarray,
+    std_rec: np.ndarray,
+    best_feasible: float,
+    rlim: float,
+) -> np.ndarray:
+    """Constrained EI (paper Eq. 7):  EI(speed) * Pr(recall > rlim)."""
+    p_feas = 1.0 - _Phi((rlim - mean_rec) / np.maximum(std_rec, 1e-12))
+    if not np.isfinite(best_feasible):
+        # no feasible observation yet: chase feasibility only
+        return p_feas
+    return ei(mean_spd, std_spd, best_feasible) * p_feas

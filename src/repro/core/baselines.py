@@ -1,0 +1,180 @@
+"""Baseline tuners evaluated in the paper (§V-A):
+
+* Default      — no tuning; per-index-type default configurations.
+* RandomLHS    — Latin hypercube sampling over the holistic space [33, 34].
+* OtterTuneLike— single-objective GP-BO on a weighted sum of normalized
+                 objectives, EI acquisition [11].
+* QEHVI        — vanilla multi-objective BO: holistic GP on raw standardized
+                 objectives, MC-EHVI with reference point 0, index type treated
+                 as just another searched dimension (no polling / NPI /
+                 abandon) [24].
+* OpenTunerLike— AUC-bandit meta-search over numerical techniques (random,
+                 annealing-style perturbation, crossover) on the weighted-sum
+                 reward [20].
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from .acquisition import ehvi_mc, ei
+from .gp import GP
+from .pareto import non_dominated_mask
+from .space import Config
+from .tuner import TunerBase
+
+
+class DefaultOnly(TunerBase):
+    name = "default"
+
+    def run(self, n_iters: int) -> "DefaultOnly":
+        for t in self.space.type_names:
+            if len(self.history) >= n_iters:
+                break
+            self._evaluate(self.space.default_config(t), recommend_time=0.0)
+        return self
+
+
+class RandomLHS(TunerBase):
+    name = "random_lhs"
+
+    def run(self, n_iters: int) -> "RandomLHS":
+        t0 = time.perf_counter()
+        cfgs = self.space.lhs(self.rng, n_iters)
+        rec = time.perf_counter() - t0
+        for c in cfgs:
+            self._evaluate(c, recommend_time=rec / max(n_iters, 1))
+        return self
+
+
+def _weighted_sum(Y: np.ndarray, w: float = 0.5) -> np.ndarray:
+    """Normalized weighted-sum scalarization used to port single-objective
+    baselines to the bi-objective problem (paper §V-A)."""
+    mx = Y.max(axis=0)
+    mx = np.where(mx <= 0, 1.0, mx)
+    return w * Y[:, 0] / mx[0] + (1 - w) * Y[:, 1] / mx[1]
+
+
+class OtterTuneLike(TunerBase):
+    name = "ottertune"
+
+    def __init__(self, *args, n_init: int = 10, n_candidates: int = 512, **kw):
+        super().__init__(*args, **kw)
+        self.n_init = n_init
+        self.n_candidates = n_candidates
+
+    def run(self, n_iters: int) -> "OtterTuneLike":
+        for c in self.space.lhs(self.rng, min(self.n_init, n_iters)):
+            self._evaluate(c, recommend_time=0.0)
+        while len(self.history) < n_iters:
+            t0 = time.perf_counter()
+            Y = self.Y
+            scal = _weighted_sum(Y)
+            gp = GP(seed=int(self.rng.integers(2**31)))
+            gp.fit(self.X_enc, scal[:, None])
+            cands = self.space.sample(self.rng, self.n_candidates)
+            Xc = np.stack([self.space.encode(c) for c in cands])
+            mean, std = gp.predict(Xc)
+            acq = ei(mean[:, 0], std[:, 0], float(scal.max()))
+            cfg = cands[int(np.argmax(acq))]
+            self._evaluate(cfg, recommend_time=time.perf_counter() - t0)
+        return self
+
+
+class QEHVI(TunerBase):
+    name = "qehvi"
+
+    def __init__(self, *args, n_init: int = 10, n_candidates: int = 512, mc_samples: int = 64, **kw):
+        super().__init__(*args, **kw)
+        self.n_init = n_init
+        self.n_candidates = n_candidates
+        self.mc_samples = mc_samples
+
+    def run(self, n_iters: int) -> "QEHVI":
+        for c in self.space.lhs(self.rng, min(self.n_init, n_iters)):
+            self._evaluate(c, recommend_time=0.0)
+        while len(self.history) < n_iters:
+            t0 = time.perf_counter()
+            Y = self.Y
+            gp = GP(seed=int(self.rng.integers(2**31)))
+            gp.fit(self.X_enc, Y)
+            cands = self.space.sample(self.rng, self.n_candidates)
+            Xc = np.stack([self.space.encode(c) for c in cands])
+            mean, std = gp.predict(Xc)
+            front = Y[non_dominated_mask(Y)]
+            ref = np.zeros(2)  # paper: qEHVI reference point set to 0
+            acq = ehvi_mc(mean, std, front, ref, self.rng, self.mc_samples)
+            cfg = cands[int(np.argmax(acq))]
+            self._evaluate(cfg, recommend_time=time.perf_counter() - t0)
+        return self
+
+
+class OpenTunerLike(TunerBase):
+    """AUC-bandit over low-overhead numerical search techniques."""
+
+    name = "opentuner"
+
+    TECHNIQUES = ("random", "perturb", "crossover", "anneal")
+
+    def __init__(self, *args, window: int = 30, **kw):
+        super().__init__(*args, **kw)
+        self.window = window
+        self._uses: List[str] = []
+        self._credits: List[float] = []
+        self._temp = 0.5
+
+    def _pick_technique(self) -> str:
+        # AUC-credit bandit: exploitation score per technique from recent
+        # successes, plus a sqrt exploration bonus.
+        scores = {}
+        n_total = max(len(self._uses), 1)
+        for t in self.TECHNIQUES:
+            idx = [i for i, u in enumerate(self._uses[-self.window :]) if u == t]
+            if not idx:
+                scores[t] = float("inf")
+                continue
+            credit = np.mean([self._credits[-self.window :][i] for i in idx])
+            scores[t] = credit + np.sqrt(2.0 * np.log(n_total) / len(idx))
+        return max(scores, key=lambda t: scores[t])
+
+    def _propose(self, tech: str) -> Config:
+        good = None
+        if self.history:
+            scal = _weighted_sum(self.Y)
+            good = self.history[int(np.argmax(scal))].config
+        if tech == "random" or good is None:
+            return self.space.sample(self.rng, 1)[0]
+        if tech == "perturb":
+            return self.space.perturb(self.rng, good, scale=0.1)
+        if tech == "anneal":
+            cfg = self.space.perturb(self.rng, good, scale=self._temp)
+            self._temp = max(self._temp * 0.97, 0.02)
+            return cfg
+        if tech == "crossover":
+            other = self.history[int(self.rng.integers(len(self.history)))].config
+            if other["index_type"] != good["index_type"]:
+                return self.space.perturb(self.rng, good, scale=0.1)
+            xa, xb = self.space.encode(good), self.space.encode(other)
+            mask = self.rng.random(xa.shape) < 0.5
+            return self.space.decode(np.where(mask, xa, xb), index_type=good["index_type"])
+        raise ValueError(tech)
+
+    def run(self, n_iters: int) -> "OpenTunerLike":
+        while len(self.history) < n_iters:
+            t0 = time.perf_counter()
+            tech = self._pick_technique()
+            cfg = self._propose(tech)
+            rec = time.perf_counter() - t0
+            before = _weighted_sum(self.Y).max() if self.history else -np.inf
+            obs = self._evaluate(cfg, recommend_time=rec)
+            after = _weighted_sum(self.Y).max()
+            self._uses.append(tech)
+            self._credits.append(1.0 if after > before else 0.0)
+        return self
+
+
+ALL_BASELINES = {
+    c.name: c for c in (DefaultOnly, RandomLHS, OtterTuneLike, QEHVI, OpenTunerLike)
+}

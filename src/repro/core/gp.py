@@ -1,0 +1,219 @@
+"""Gaussian-process surrogate in pure JAX.
+
+Matérn-5/2 ARD kernel (paper §IV-B chooses Matérn 5/2 "owing to its excellent
+ability to balance flexibility and smoothness"). Multi-output is handled by
+independent per-output hyperparameters (the paper's multi-output GP "assumes
+each output to be independent").
+
+Implementation notes
+--------------------
+* Inputs live on the unit cube (``SearchSpace.encode``); outputs are
+  standardized per-output before fitting, so float32 + adaptive jitter is
+  numerically fine at the ≤ a-few-hundred-points scale BO operates at.
+* Training sets grow by one point per iteration. To keep ``jax.jit`` cache
+  hits, X/Y are padded to the next multiple of ``PAD`` and padded rows get a
+  huge observation-noise term, which removes them from the posterior to
+  numerical precision without changing array shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAD = 32
+_BIG_NOISE = 1e4
+_JITTER = 1e-5
+_NOISE_FLOOR = 1e-4  # variance floor keeps f32 Cholesky well-conditioned
+
+
+@dataclasses.dataclass
+class GPParams:
+    log_ls: jnp.ndarray  # (m, d) per-output ARD lengthscales
+    log_sf: jnp.ndarray  # (m,)  signal stddev
+    log_noise: jnp.ndarray  # (m,) observation noise stddev
+
+
+@dataclasses.dataclass
+class GPState:
+    params: GPParams
+    x: jnp.ndarray  # (n_pad, d)
+    y: jnp.ndarray  # (n_pad, m) standardized
+    mask: jnp.ndarray  # (n_pad,) 1.0 for real rows
+    chol: jnp.ndarray  # (m, n_pad, n_pad)
+    alpha: jnp.ndarray  # (m, n_pad)
+    y_mean: jnp.ndarray  # (m,)
+    y_std: jnp.ndarray  # (m,)
+
+
+def _sqdist(a: jnp.ndarray, b: jnp.ndarray, inv_ls: jnp.ndarray) -> jnp.ndarray:
+    a = a * inv_ls
+    b = b * inv_ls
+    d2 = jnp.sum(a * a, -1)[:, None] + jnp.sum(b * b, -1)[None, :] - 2.0 * a @ b.T
+    return jnp.maximum(d2, 0.0)
+
+
+def matern52(a, b, log_ls, log_sf):
+    inv_ls = jnp.exp(-log_ls)
+    r = jnp.sqrt(_sqdist(a, b, inv_ls) + 1e-12)
+    s5 = jnp.sqrt(5.0) * r
+    sf2 = jnp.exp(2.0 * log_sf)
+    return sf2 * (1.0 + s5 + (5.0 / 3.0) * r * r) * jnp.exp(-s5)
+
+
+def _nll_single(log_ls, log_sf, log_noise, x, y, mask):
+    """Negative log marginal likelihood for one output (padded rows masked)."""
+    n = x.shape[0]
+    log_ls = jnp.clip(log_ls, jnp.log(0.05), jnp.log(20.0))
+    log_sf = jnp.clip(log_sf, jnp.log(0.05), jnp.log(4.0))
+    k = matern52(x, x, log_ls, log_sf)
+    sf2 = jnp.exp(2.0 * log_sf)
+    # noise floor & jitter RELATIVE to the signal variance: keeps the f32
+    # Cholesky well-conditioned whatever scale the fit settles on
+    noise = (sf2 * _NOISE_FLOOR + jnp.exp(2.0 * log_noise)) * mask + _BIG_NOISE * (1.0 - mask)
+    k = k + jnp.diag(noise + _JITTER * sf2)
+    chol = jnp.linalg.cholesky(k)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    # padded rows: y=0 there so the quadratic term contributes ~0; logdet picks
+    # up a constant ~log(BIG_NOISE) per pad row that does not affect gradients
+    # w.r.t. hyperparameters in any material way.
+    nll = 0.5 * y @ alpha + jnp.sum(jnp.log(jnp.diag(chol))) + 0.5 * n * jnp.log(2 * jnp.pi)
+    # weak log-normal priors keep hyperparameters in a sane band
+    prior = 0.05 * jnp.sum((log_ls - jnp.log(0.5)) ** 2) + 0.05 * log_sf**2 + 0.02 * (
+        log_noise - jnp.log(0.05)
+    ) ** 2
+    return nll + prior
+
+
+@partial(jax.jit, static_argnames=("steps",))
+def _fit_padded(x, y, mask, key, steps: int = 120):
+    """Adam on the NLL, vmapped over outputs. Returns fitted params + chol/alpha."""
+    n, d = x.shape
+    m = y.shape[1]
+
+    def fit_one(y_col, key_i):
+        log_ls0 = jnp.log(0.5) * jnp.ones((d,))
+        log_sf0 = jnp.array(0.0)
+        log_noise0 = jnp.array(jnp.log(0.1))
+        params = (log_ls0, log_sf0, log_noise0)
+        opt_state = jax.tree.map(lambda p: (jnp.zeros_like(p), jnp.zeros_like(p)), params)
+        lr = 0.05
+
+        bounds = (
+            (jnp.log(0.05), jnp.log(20.0)),  # log_ls
+            (jnp.log(0.05), jnp.log(4.0)),  # log_sf
+            (jnp.log(1e-3), jnp.log(1.0)),  # log_noise
+        )
+
+        def step(carry, i):
+            params, opt_state = carry
+            grads = jax.grad(lambda ps: _nll_single(*ps, x, y_col, mask))(params)
+            new_params, new_state = [], []
+            for p, g, (m1, m2), (lo, hi) in zip(params, grads, opt_state, bounds):
+                g = jnp.where(jnp.isfinite(g), g, 0.0)  # NaN-guard the step
+                m1 = 0.9 * m1 + 0.1 * g
+                m2 = 0.999 * m2 + 0.001 * g * g
+                m1h = m1 / (1 - 0.9 ** (i + 1))
+                m2h = m2 / (1 - 0.999 ** (i + 1))
+                new_p = jnp.clip(p - lr * m1h / (jnp.sqrt(m2h) + 1e-8), lo, hi)
+                new_params.append(new_p)
+                new_state.append((m1, m2))
+            return (tuple(new_params), tuple(new_state)), 0.0
+
+        (params, _), _ = jax.lax.scan(step, (params, opt_state), jnp.arange(steps))
+        log_ls, log_sf, log_noise = params
+        # clamp for safety (posterior uses these values directly)
+        log_ls = jnp.clip(log_ls, jnp.log(0.05), jnp.log(20.0))
+        log_sf = jnp.clip(log_sf, jnp.log(0.05), jnp.log(20.0))
+        log_noise = jnp.clip(log_noise, jnp.log(1e-3), jnp.log(1.0))
+        return log_ls, log_sf, log_noise
+
+    keys = jax.random.split(key, m)
+    log_ls, log_sf, log_noise = jax.vmap(fit_one, in_axes=(1, 0))(y, keys)
+
+    def posterior_terms(ls_i, sf_i, nz_i, y_col):
+        k = matern52(x, x, ls_i, sf_i)
+        sf2 = jnp.exp(2.0 * sf_i)
+        noise = (sf2 * _NOISE_FLOOR + jnp.exp(2.0 * nz_i)) * mask + _BIG_NOISE * (1.0 - mask)
+        k = k + jnp.diag(noise + _JITTER * sf2)
+        chol = jnp.linalg.cholesky(k)
+        alpha = jax.scipy.linalg.cho_solve((chol, True), y_col)
+        return chol, alpha
+
+    chol, alpha = jax.vmap(posterior_terms, in_axes=(0, 0, 0, 1))(log_ls, log_sf, log_noise, y)
+    return (log_ls, log_sf, log_noise), chol, alpha
+
+
+@jax.jit
+def _predict_padded(log_ls, log_sf, chol, alpha, x_train, x_test):
+    def one(ls_i, sf_i, chol_i, alpha_i):
+        ks = matern52(x_test, x_train, ls_i, sf_i)  # (t, n)
+        mean = ks @ alpha_i
+        v = jax.scipy.linalg.solve_triangular(chol_i, ks.T, lower=True)  # (n, t)
+        kss = jnp.exp(2.0 * sf_i)
+        var = jnp.maximum(kss - jnp.sum(v * v, axis=0), 1e-10)
+        return mean, var
+
+    mean, var = jax.vmap(one)(log_ls, log_sf, chol, alpha)
+    return mean.T, var.T  # (t, m)
+
+
+class GP:
+    """Exact multi-output GP with Matérn-5/2 ARD kernel.
+
+    fit(X (n,d), Y (n,m)) then predict(Xt) -> (mean, std), in the original Y
+    units (standardization handled internally).
+    """
+
+    def __init__(self, seed: int = 0, fit_steps: int = 120):
+        self._key = jax.random.PRNGKey(seed)
+        self.fit_steps = fit_steps
+        self.state: GPState | None = None
+
+    def fit(self, X: np.ndarray, Y: np.ndarray) -> "GP":
+        X = np.asarray(X, np.float32)
+        Y = np.asarray(Y, np.float32)
+        if Y.ndim == 1:
+            Y = Y[:, None]
+        n, d = X.shape
+        m = Y.shape[1]
+        y_mean = Y.mean(axis=0)
+        y_std = Y.std(axis=0) + 1e-8
+        Yn = (Y - y_mean) / y_std
+        n_pad = int(np.ceil(max(n, 1) / PAD) * PAD)
+        xp = np.zeros((n_pad, d), np.float32)
+        yp = np.zeros((n_pad, m), np.float32)
+        maskp = np.zeros((n_pad,), np.float32)
+        xp[:n] = X
+        yp[:n] = Yn
+        maskp[:n] = 1.0
+        self._key, sub = jax.random.split(self._key)
+        (log_ls, log_sf, log_noise), chol, alpha = _fit_padded(
+            jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(maskp), sub, steps=self.fit_steps
+        )
+        self.state = GPState(
+            params=GPParams(log_ls, log_sf, log_noise),
+            x=jnp.asarray(xp),
+            y=jnp.asarray(yp),
+            mask=jnp.asarray(maskp),
+            chol=chol,
+            alpha=alpha,
+            y_mean=jnp.asarray(y_mean),
+            y_std=jnp.asarray(y_std),
+        )
+        return self
+
+    def predict(self, Xt: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        assert self.state is not None, "fit() first"
+        s = self.state
+        Xt = jnp.asarray(np.asarray(Xt, np.float32))
+        mean, var = _predict_padded(
+            s.params.log_ls, s.params.log_sf, s.chol, s.alpha, s.x, Xt
+        )
+        mean = np.asarray(mean) * np.asarray(s.y_std) + np.asarray(s.y_mean)
+        std = np.sqrt(np.asarray(var)) * np.asarray(s.y_std)
+        return mean, std

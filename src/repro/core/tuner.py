@@ -1,0 +1,266 @@
+"""VDTuner: polling multi-objective Bayesian optimization (paper Algorithm 1).
+
+The tuner maximizes two objectives — (search speed, recall) by default, or
+(QP$, recall) in cost-aware mode — over a `SearchSpace` whose tunable set
+changes with the index type. Components:
+
+* holistic GP surrogate over all index types (one copy of shared params),
+* NPI polling normalization (Eq. 2–3),
+* MC-EHVI acquisition with ref = 0.5 * per-type balanced base (Eq. 4),
+* round-robin polling with successive abandon (Eq. 5–6, windowed trigger),
+* optional recall-floor constraint mode with CEI (Eq. 7) and bootstrapping
+  from previous constraint levels (§IV-F).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .acquisition import cei, ehvi_mc
+from .budget import SuccessiveAbandon
+from .gp import GP
+from .normalize import npi_normalize
+from .pareto import non_dominated_mask, pareto_front
+from .space import Config, SearchSpace
+
+Objective = Callable[[Config], Dict[str, float]]
+
+
+class TuningFailure(RuntimeError):
+    """Raised by an objective when a configuration crashes / times out."""
+
+
+@dataclasses.dataclass
+class Observation:
+    iteration: int
+    config: Config
+    y: np.ndarray  # (2,) raw objective values (speed-like, recall)
+    raw: Dict[str, float]
+    recommend_time: float
+    eval_time: float
+    failed: bool = False
+    bootstrap: bool = False
+
+    @property
+    def index_type(self) -> str:
+        return self.config["index_type"]
+
+
+def default_transform(result: Dict[str, float]) -> Tuple[float, float]:
+    return float(result["speed"]), float(result["recall"])
+
+
+def cost_aware_transform(eta: float = 1.0) -> Callable[[Dict[str, float]], Tuple[float, float]]:
+    """Eq. 8: QP$ = speed / (eta * memory GiB). Any resource/price function can
+    be swapped in here; NPI normalization makes the tuner invariant to eta."""
+
+    def tf(result: Dict[str, float]) -> Tuple[float, float]:
+        mem = max(float(result.get("mem_gib", 1.0)), 1e-9)
+        return float(result["speed"]) / (eta * mem), float(result["recall"])
+
+    return tf
+
+
+class TunerBase:
+    """Shared bookkeeping: evaluation with failure fallback + history."""
+
+    name = "base"
+
+    def __init__(
+        self,
+        space: SearchSpace,
+        objective: Objective,
+        seed: int = 0,
+        transform: Callable[[Dict[str, float]], Tuple[float, float]] = default_transform,
+    ):
+        self.space = space
+        self.objective = objective
+        self.rng = np.random.default_rng(seed)
+        self.transform = transform
+        self.history: List[Observation] = []
+        self._seed = seed
+
+    # ------------------------------------------------------------------
+    def _evaluate(self, cfg: Config, recommend_time: float) -> Observation:
+        t0 = time.perf_counter()
+        failed = False
+        try:
+            raw = self.objective(cfg)
+            y = np.asarray(self.transform(raw), np.float64)
+            if not np.all(np.isfinite(y)):
+                raise TuningFailure("non-finite objective")
+        except TuningFailure:
+            # paper §V-A: failed configs get the worst values in history
+            failed = True
+            raw = {}
+            y = self._worst_so_far()
+        obs = Observation(
+            iteration=len(self.history),
+            config=cfg,
+            y=y,
+            raw=raw,
+            recommend_time=recommend_time,
+            eval_time=time.perf_counter() - t0,
+            failed=failed,
+        )
+        self.history.append(obs)
+        return obs
+
+    def _worst_so_far(self) -> np.ndarray:
+        ys = [o.y for o in self.history if not o.failed]
+        if not ys:
+            return np.array([1e-6, 1e-6])
+        return np.min(np.stack(ys), axis=0)
+
+    # --- views ----------------------------------------------------------
+    @property
+    def X_enc(self) -> np.ndarray:
+        return np.stack([self.space.encode(o.config) for o in self.history])
+
+    @property
+    def Y(self) -> np.ndarray:
+        return np.stack([o.y for o in self.history])
+
+    @property
+    def types(self) -> np.ndarray:
+        return np.array([o.index_type for o in self.history])
+
+    def pareto(self) -> np.ndarray:
+        return pareto_front(self.Y)
+
+    def best_speed_at_recall(self, rlim: float) -> float:
+        """Best observed speed among configs with recall >= rlim (paper Fig. 6)."""
+        ys = self.Y
+        ok = ys[:, 1] >= rlim
+        return float(ys[ok, 0].max()) if ok.any() else float("nan")
+
+    def run(self, n_iters: int) -> "TunerBase":
+        raise NotImplementedError
+
+
+class VDTuner(TunerBase):
+    """Algorithm 1: polling BO with NPI surrogate + successive abandon."""
+
+    name = "vdtuner"
+
+    def __init__(
+        self,
+        space: SearchSpace,
+        objective: Objective,
+        seed: int = 0,
+        transform=default_transform,
+        abandon_window: int = 10,
+        n_candidates: int = 512,
+        mc_samples: int = 64,
+        gp_fit_steps: int = 120,
+        rlim: Optional[float] = None,
+        bootstrap_history: Optional[Sequence[Observation]] = None,
+    ):
+        super().__init__(space, objective, seed, transform)
+        self.abandon = SuccessiveAbandon(space.type_names, window=abandon_window)
+        self.n_candidates = n_candidates
+        self.mc_samples = mc_samples
+        self.gp_fit_steps = gp_fit_steps
+        self.rlim = rlim  # user recall-floor preference (constraint mode)
+        self._poll_cursor = 0
+        if bootstrap_history:
+            # §IV-F: warm-start the surrogate with data from previous
+            # constraint levels. These observations feed the GP/fronts but are
+            # not re-evaluated.
+            for o in bootstrap_history:
+                self.history.append(dataclasses.replace(o, bootstrap=True))
+
+    # ------------------------------------------------------------------
+    def _initial_sampling(self):
+        """Algorithm 1 lines 1–5: each index type's default configuration."""
+        seen = set(o.index_type for o in self.history)
+        for t in self.space.type_names:
+            if t in seen:
+                continue  # bootstrapped data already covers this type
+            self._evaluate(self.space.default_config(t), recommend_time=0.0)
+
+    def _next_poll_type(self) -> str:
+        remaining = self.abandon.remaining
+        t = remaining[self._poll_cursor % len(remaining)]
+        self._poll_cursor += 1
+        return t
+
+    def _candidates(self, t: str) -> List[Config]:
+        """Candidate set within type-t's subspace: uniform + perturbations of
+        the type's (and globally) best observed configurations."""
+        n_uniform = self.n_candidates // 2
+        cands = self.space.sample(self.rng, n_uniform, index_type=t)
+        # exploit: perturb non-dominated configs of this type
+        ys = self.Y
+        nd = non_dominated_mask(ys)
+        seeds = [o.config for o, keep in zip(self.history, nd) if keep and o.index_type == t]
+        if not seeds:  # fall back to the type's best-speed and best-recall configs
+            mine = [o for o in self.history if o.index_type == t and not o.failed]
+            if mine:
+                seeds = [
+                    max(mine, key=lambda o: o.y[0]).config,
+                    max(mine, key=lambda o: o.y[1]).config,
+                ]
+        while len(cands) < self.n_candidates and seeds:
+            base = seeds[len(cands) % len(seeds)]
+            scale = float(self.rng.choice([0.05, 0.1, 0.2]))
+            cands.append(self.space.perturb(self.rng, base, scale=scale))
+        if len(cands) < self.n_candidates:
+            cands += self.space.sample(self.rng, self.n_candidates - len(cands), index_type=t)
+        return cands
+
+    def step(self) -> Observation:
+        t0 = time.perf_counter()
+        Y, types = self.Y, self.types
+
+        # --- successive abandon (lines 7–14) ---------------------------
+        self.abandon.step(Y, types)
+
+        # --- NPI normalization + holistic surrogate (lines 15–18) ------
+        mode = "balanced" if self.rlim is None else "max"
+        Yn, bases = npi_normalize(Y, types, mode=mode)
+        gp = GP(seed=int(self.rng.integers(2**31)), fit_steps=self.gp_fit_steps)
+        gp.fit(self.X_enc, Yn)
+
+        # --- poll next index type & recommend (lines 19–21) ------------
+        t = self._next_poll_type()
+        cands = self._candidates(t)
+        Xc = np.stack([self.space.encode(c) for c in cands])
+        mean, std = gp.predict(Xc)
+
+        if self.rlim is None:
+            # EHVI with ref = 0.5 * base; in normalized space the base is
+            # (1, 1), so r = (0.5, 0.5); the front is the normalized
+            # non-dominated set across all types (§IV-C).
+            front = Yn[non_dominated_mask(Yn)]
+            ref = np.array([0.5, 0.5])
+            acq = ehvi_mc(mean, std, front, ref, self.rng, self.mc_samples)
+        else:
+            # constraint mode: EI(speed) * Pr(recall > rlim), thresholds in the
+            # candidate type's normalized units.
+            base_t = bases.get(t, np.array([1.0, 1.0]))
+            rlim_n = self.rlim / base_t[1]
+            feas = Y[:, 1] >= self.rlim
+            if feas.any():
+                spd_n = np.array(
+                    [o.y[0] / bases[o.index_type][0] for o, f in zip(self.history, feas) if f]
+                )
+                best_feasible = float(spd_n.max())
+            else:
+                best_feasible = float("-inf")
+            acq = cei(mean[:, 0], std[:, 0], mean[:, 1], std[:, 1], best_feasible, rlim_n)
+
+        cfg = cands[int(np.argmax(acq))]
+        rec_time = time.perf_counter() - t0
+
+        # --- evaluate & update (line 22) --------------------------------
+        return self._evaluate(cfg, recommend_time=rec_time)
+
+    def run(self, n_iters: int) -> "VDTuner":
+        self._initial_sampling()
+        while len([o for o in self.history if not o.bootstrap]) < n_iters:
+            self.step()
+        return self

@@ -1,0 +1,83 @@
+"""Optional GPipe-style pipeline parallelism (off by default — TP x FSDP
+already fits every assigned model, see DESIGN.md §5).
+
+``pipeline_apply`` runs a layer stack split into S stages over M microbatches
+with the classic (S + M - 1)-slot schedule, expressed as a single lax.scan
+whose carry holds one in-flight activation per stage. On a mesh with a
+"stage" axis the per-stage params shard over it and the activation hand-off
+between slots lowers to a collective-permute; on one device it degrades to
+exactly the sequential computation (same math — tested against the plain
+scan).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def pipeline_apply(
+    layers_params: Any,
+    x: jnp.ndarray,
+    block_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+    n_stages: int,
+    n_micro: int,
+):
+    """Apply a stacked layer pytree (leading dim = n_layers) to x (b, ...).
+
+    The layer stack is split into `n_stages` contiguous stages; the batch is
+    split into `n_micro` microbatches. Returns the same value as sequentially
+    scanning the layers.
+    """
+    n_layers = jax.tree.leaves(layers_params)[0].shape[0]
+    assert n_layers % n_stages == 0, "layers must divide stages"
+    per_stage = n_layers // n_stages
+    b = x.shape[0]
+    assert b % n_micro == 0, "batch must divide microbatches"
+    mb = b // n_micro
+    micro = x.reshape(n_micro, mb, *x.shape[1:])
+
+    # stage s holds layers [s*per_stage, (s+1)*per_stage)
+    stage_params = jax.tree.map(
+        lambda a: a.reshape(n_stages, per_stage, *a.shape[1:]), layers_params
+    )
+
+    def run_stage(s_params, h):
+        def body(h, layer_p):
+            return block_fn(layer_p, h), None
+
+        h, _ = jax.lax.scan(body, h, s_params)
+        return h
+
+    n_slots = n_stages + n_micro - 1
+    buf = jnp.zeros((n_stages, mb, *x.shape[1:]), x.dtype)  # in-flight per stage
+    out = jnp.zeros_like(micro)
+
+    def slot(carry, t):
+        buf, out = carry
+        # shift: stage s consumes what stage s-1 produced last slot; stage 0
+        # consumes microbatch t. (On a "stage" mesh axis this shift is a
+        # collective-permute.)
+        incoming = jnp.where(
+            (t >= 0) & (t < n_micro),
+            jax.lax.dynamic_index_in_dim(micro, jnp.clip(t, 0, n_micro - 1), 0, False),
+            jnp.zeros_like(buf[0]),
+        )
+        shifted = jnp.concatenate([incoming[None], buf[:-1]], axis=0)
+        # every stage computes on its current slot input
+        new_buf = jax.vmap(run_stage)(stage_params, shifted)
+        # stage S-1's output for microbatch (t - S + 1) is final
+        done_idx = t - (n_stages - 1)
+        out = jax.lax.cond(
+            (done_idx >= 0) & (done_idx < n_micro),
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, new_buf[-1], jnp.clip(done_idx, 0, n_micro - 1), 0
+            ),
+            lambda o: o,
+            out,
+        )
+        return (new_buf, out), None
+
+    (buf, out), _ = jax.lax.scan(slot, (buf, out), jnp.arange(n_slots))
+    return out.reshape(b, *x.shape[1:])

@@ -1,0 +1,195 @@
+"""Logical-axis sharding rules (DP / TP / FSDP / EP / SP + pod axis).
+
+Model code annotates activations with *logical* axis names via ``constrain``;
+parameters get specs inferred from their path + shape. The rules map logical
+axes onto mesh axes with divisibility fallbacks (a dimension that does not
+divide by its mesh axes is left replicated — recorded for the roofline notes).
+
+Mapping (mesh axes ("pod", "data", "model") — "pod" optional):
+  batch      -> (pod, data)     activations' batch dim (DP)
+  seq        -> None            (train/prefill activations; SP uses "data")
+  seq_sp     -> (data,)         sequence-parallel prefill for long contexts
+  kv_seq     -> (model,)        decode KV cache sequence (flash-decoding style)
+  embed      -> None            activation feature dim
+  heads/ff/vocab/experts/ssm_inner -> (model,)   tensor parallel
+  kv_heads   -> (model,) if divisible else None
+  fsdp       -> (pod, data)     parameter & optimizer-state sharding
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+class ShardingRules:
+    def __init__(self, mesh: Optional[Mesh], fsdp: bool = True, seq_parallel: bool = True):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        self.seq_parallel = seq_parallel
+        self.fallbacks: list[str] = []
+        axes = tuple(mesh.axis_names) if mesh is not None else ()
+        dp = tuple(a for a in ("pod", "data") if a in axes)
+        tp = ("model",) if "model" in axes else ()
+        self.logical: Dict[str, Tuple[str, ...]] = {
+            "batch": dp,
+            "seq": (),
+            "seq_sp": ("data",) if "data" in axes else (),
+            # Megatron-style sequence parallelism for the residual stream
+            # between blocks: the lax.scan saved carry shards its seq dim over
+            # the model axis (16x smaller activation checkpoints; interior
+            # compute re-gathers as needed).
+            "seq_act": tp if seq_parallel else (),
+            "kv_seq": tp,
+            "embed": (),
+            "heads": tp,
+            "kv_heads": tp,
+            "head_dim": (),
+            "ff": tp,
+            "vocab": tp,
+            "experts": tp,
+            "ssm_inner": tp,
+            "ssm_state": (),
+            "fsdp": dp if fsdp else (),
+            "layers": (),
+            "replicated": (),
+        }
+
+    # ------------------------------------------------------------------
+    def _axis_size(self, names: Tuple[str, ...]) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in names], initial=1))
+
+    def spec(self, axes: Sequence[Optional[str]], shape: Optional[Tuple[int, ...]] = None) -> P:
+        """PartitionSpec from logical axis names, with divisibility fallback.
+        A mesh axis may appear once per spec: later logical axes that resolve
+        to an already-used mesh axis fall back to replicated (e.g. "experts"
+        wins over "ff" when both map to the model axis and E divides it)."""
+        parts = []
+        used: set = set()
+        for i, name in enumerate(axes):
+            mesh_axes = tuple(
+                a for a in self.logical.get(name or "replicated", ()) if a not in used
+            )
+            if not mesh_axes:
+                parts.append(None)
+                continue
+            if shape is not None:
+                sz = self._axis_size(mesh_axes)
+                if shape[i] % sz != 0:
+                    # fallback: try a prefix of the mesh axes, else replicate
+                    for cut in range(len(mesh_axes) - 1, 0, -1):
+                        if shape[i] % self._axis_size(mesh_axes[:cut]) == 0:
+                            mesh_axes = mesh_axes[:cut]
+                            break
+                    else:
+                        self.fallbacks.append(f"{name}:dim{shape[i]}")
+                        parts.append(None)
+                        continue
+                    if shape[i] % self._axis_size(mesh_axes) != 0:
+                        self.fallbacks.append(f"{name}:dim{shape[i]}")
+                        parts.append(None)
+                        continue
+            used.update(mesh_axes)
+            parts.append(mesh_axes[0] if len(mesh_axes) == 1 else mesh_axes)
+        return P(*parts)
+
+    def sharding(self, axes: Sequence[Optional[str]], shape=None) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(axes, shape))
+
+
+# ---------------------------------------------------------------------------
+# context for activation constraints inside model code
+# ---------------------------------------------------------------------------
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_STATE, "rules", None)
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint under the active rules (no-op otherwise)."""
+    rules = current_rules()
+    if rules is None or rules.mesh is None:
+        return x
+    spec = rules.spec(axes, tuple(x.shape))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# parameter axis inference by path convention
+# ---------------------------------------------------------------------------
+_PARAM_AXES_BY_NAME: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embed": ("vocab", "fsdp"),
+    "head": ("fsdp", "vocab"),
+    # attention
+    "wq": ("fsdp", "heads"),
+    "wk": ("fsdp", "kv_heads"),
+    "wv": ("fsdp", "kv_heads"),
+    "wo": ("heads", "fsdp"),
+    "bq": ("heads",),
+    "bk": ("kv_heads",),
+    "bv": ("kv_heads",),
+    # mlp
+    "w_gate": ("fsdp", "ff"),
+    "w_up": ("fsdp", "ff"),
+    "w_down": ("ff", "fsdp"),
+    # moe (leading expert dim)
+    "we_gate": ("experts", "fsdp", "ff"),
+    "we_up": ("experts", "fsdp", "ff"),
+    "we_down": ("experts", "ff", "fsdp"),
+    "router": ("fsdp", "experts"),
+    # ssm
+    "in_proj": ("fsdp", "ssm_inner"),
+    "out_proj": ("ssm_inner", "fsdp"),
+    "conv_w": (None, "ssm_inner"),
+    "a_log": (None,),
+    "ssm_d": (None,),
+    "dt_bias": (None,),
+    # norms / misc
+    "scale": (None,),
+    "bias": (None,),
+}
+
+
+def param_axes_for(path: Tuple[str, ...], shape: Tuple[int, ...]) -> Tuple[Optional[str], ...]:
+    name = path[-1]
+    axes = _PARAM_AXES_BY_NAME.get(name)
+    if axes is None:
+        axes = (None,) * len(shape)
+    # layer-stacked params carry a leading "layers" dim
+    if len(shape) == len(axes) + 1:
+        axes = ("layers",) + axes
+    elif len(shape) != len(axes):
+        axes = (None,) * len(shape)
+    return axes
+
+
+def params_sharding(params_shape: Any, rules: ShardingRules) -> Any:
+    """Pytree of NamedShardings matching a params(-shape) pytree."""
+
+    def leaf(path, x):
+        keys = tuple(
+            p.key if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path
+        )
+        return rules.sharding(param_axes_for(keys, tuple(x.shape)), tuple(x.shape))
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)

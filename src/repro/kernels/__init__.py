@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the compute hot spots + pure-jnp reference oracles."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,152 @@
+"""FlashAttention (causal, GQA, optional sliding window) as a Pallas kernel.
+
+Online-softmax tiling: for each (batch*q_head, q_tile) the kernel streams KV
+tiles through VMEM keeping running max / normalizer / weighted accumulator in
+VMEM scratch. GQA is handled in the K/V BlockSpec index maps (q-head ->
+kv-head = h // group), so grouped heads reuse the same KV tiles without any
+HBM duplication. Sliding windows additionally bound which KV tiles can
+contribute — fully-masked tiles are skipped via pl.when (no MXU work).
+
+Grid: (b * hq, sq/bq, sk/bk); the KV axis is innermost so the scratch carry
+is valid across its steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, scale: float, causal: bool, window, bq: int, bk: int, k_steps: int,
+    q_offset: int, kv_len: int,
+):
+    kv = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(kv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # tile visibility (static per (qi, kv) only via dynamic check)
+    q_start = qi * bq + q_offset  # absolute position of first query row
+    k_start = kv * bk
+    # any key in this tile visible to any query in the q tile?
+    visible = k_start < kv_len  # end-padded keys are never visible
+    if causal:
+        visible = jnp.logical_and(visible, k_start <= q_start + bq - 1)
+    if window is not None:
+        visible = jnp.logical_and(visible, k_start + bk - 1 > q_start - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[...][0].astype(jnp.float32)  # (bq, dh)
+        k = k_ref[...][0].astype(jnp.float32)  # (bk, dh)
+        v = v_ref[...][0].astype(jnp.float32)  # (bk, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale  # (bq, bk)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_len  # mask end padding
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG)
+        m_prev = m_ref[...]  # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)  # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(kv == k_steps - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / l)[None].astype(o_ref.dtype)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "bq", "bk", "interpret")
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q (b, sq, hq, dh); k/v (b, sk, hkv, dh) -> (b, sq, hq, dh)."""
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    group = hq // hkv
+    scale = 1.0 / float(dh) ** 0.5
+    q_offset = sk - sq  # queries occupy the tail of the key axis
+
+    bq = min(bq, _round_up(sq, 8))
+    bk = min(bk, _round_up(sk, 128))
+    sqp, skp = _round_up(sq, bq), _round_up(sk, bk)
+    # layout (b*h, s, dh): fold batch and heads into the leading grid axis
+    qt = jnp.moveaxis(q, 2, 1).reshape(b * hq, sq, dh)
+    kt = jnp.moveaxis(k, 2, 1).reshape(b * hkv, sk, dh)
+    vt = jnp.moveaxis(v, 2, 1).reshape(b * hkv, sk, dh)
+    qt = jnp.pad(qt, ((0, 0), (0, sqp - sq), (0, 0)))
+    kt = jnp.pad(kt, ((0, 0), (0, skp - sk), (0, 0)))
+    vt = jnp.pad(vt, ((0, 0), (0, skp - sk), (0, 0)))
+    k_steps = skp // bk
+    grid = (b * hq, sqp // bq, k_steps)
+
+    def q_map(h, i, j):
+        return (h, i, 0)
+
+    def kv_map(h, i, j):
+        return (h // group, j, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _fa_kernel,
+            scale=scale,
+            causal=causal,
+            window=window,
+            bq=bq,
+            bk=bk,
+            k_steps=k_steps,
+            q_offset=q_offset,
+            kv_len=sk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), q_map),
+            pl.BlockSpec((1, bk, dh), kv_map),
+            pl.BlockSpec((1, bk, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sqp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out[:, :sq].reshape(b, hq, sq, dh)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,198 @@
+"""Block-scanned FlashAttention in pure jnp/lax with a custom VJP.
+
+This is the memory-safe attention used on every backend where the Pallas TPU
+kernel is unavailable (CPU dry-run, smoke tests) — and the semantics model
+for the Pallas kernel itself. The (sq, sk) score matrix is never materialized:
+
+* forward: scan over q blocks; inner scan over kv blocks carrying the online
+  (max, normalizer, accumulator); residuals saved are only (out, lse) —
+  O(b·s·h·dh), not O(b·h·s²);
+* backward: flash backward — recompute block probabilities from (q, k, lse),
+  accumulate dq per q block and dk/dv across q blocks.
+
+Supports causal masking, GQA head grouping, sliding windows, and tail-aligned
+query offsets (decode/prefill against a longer key axis).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+_NEG = -1e30
+
+# process-wide default block sizes (tunable — see tuning/serve_tuner.py)
+DEFAULT_BQ = 512
+DEFAULT_BK = 1024
+
+
+def set_default_blocks(bq: int, bk: int) -> None:
+    global DEFAULT_BQ, DEFAULT_BK
+    DEFAULT_BQ, DEFAULT_BK = int(bq), int(bk)
+
+
+def _round_up(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def _mask(qpos, kpos, causal: bool, window, kv_len: int):
+    m = kpos[None, :] < kv_len
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m  # (bq, bk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_attention_xla(q, k, v, causal: bool = True, window: Optional[int] = None,
+                         bq: int = 512, bk: int = 1024):
+    out, _ = _forward(q, k, v, causal, window, bq, bk)
+    return out
+
+
+def flash_attention_xla(q, k, v, causal: bool = True, window: Optional[int] = None,
+                        bq: Optional[int] = None, bk: Optional[int] = None):
+    return _flash_attention_xla(
+        q, k, v, causal, window, bq or DEFAULT_BQ, bk or DEFAULT_BK
+    )
+
+
+def _blocks(q, k, v, bq, bk):
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    sqp, skp = _round_up(sq, bq), _round_up(sk, bk)
+    qp = jnp.pad(q, ((0, 0), (0, sqp - sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skp - sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skp - sk), (0, 0), (0, 0)))
+    g = hq // hkv
+    # (nqb, b, hkv, g, bq, dh) and (nkb, b, hkv, bk, dh)
+    qb = jnp.moveaxis(
+        qp.reshape(b, sqp // bq, bq, hkv, g, dh), (1, 3, 4, 2), (0, 2, 3, 4)
+    )
+    kb = jnp.moveaxis(kp.reshape(b, skp // bk, bk, hkv, dh), (1, 3, 2), (0, 2, 3))
+    vb = jnp.moveaxis(vp.reshape(b, skp // bk, bk, hkv, dh), (1, 3, 2), (0, 2, 3))
+    return qb, kb, vb, bq, bk
+
+
+def _forward(q, k, v, causal, window, bq, bk):
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / float(dh) ** 0.5
+    q_off = sk - sq
+    qb, kb, vb, bq, bk = _blocks(q, k, v, bq, bk)
+    nqb, nkb = qb.shape[0], kb.shape[0]
+
+    def q_step(_, qi_qblk):
+        qi, qblk = qi_qblk  # qblk (b, hkv, g, bq, dh)
+        qf = qblk.astype(jnp.float32) * scale
+        qpos = q_off + qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, ki_blk):
+            m_run, l_run, acc = carry
+            ki, kblk, vblk = ki_blk
+            kpos = ki * bk + jnp.arange(bk)
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", qf, kblk.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            msk = _mask(qpos, kpos, causal, window, sk)
+            s = jnp.where(msk[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m_run - m_new)
+            l_new = l_run * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32),
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, bq), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, bq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, bq, dh), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nkb), kb, vb)
+        )
+        l_safe = jnp.maximum(l_f, 1e-30)
+        out_blk = acc / l_safe[..., None]
+        lse = m_f + jnp.log(l_safe)
+        return None, (out_blk, lse)
+
+    _, (out_b, lse_b) = jax.lax.scan(q_step, None, (jnp.arange(nqb), qb))
+    # out_b (nqb, b, hkv, g, bq, dh) -> (b, sq, hq, dh)
+    out = jnp.moveaxis(out_b, (0, 4), (1, 2)).reshape(b, -1, hq, dh)[:, :sq]
+    lse = jnp.moveaxis(lse_b, (0, 4), (1, 2)).reshape(b, -1, hkv, g)[:, :sq]
+    return out.astype(q.dtype), lse
+
+
+def _fwd(q, k, v, causal, window, bq, bk):
+    out, lse = _forward(q, k, v, causal, window, bq, bk)
+    return out, (q, k, v, out, lse)
+
+
+def _bwd(causal, window, bq, bk, res, dout):
+    q, k, v, out, lse = res
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = 1.0 / float(dh) ** 0.5
+    q_off = sk - sq
+    qb, kb, vb, bq, bk = _blocks(q, k, v, bq, bk)
+    nqb, nkb = qb.shape[0], kb.shape[0]
+    dob = _blocks(dout, k, v, bq, bk)[0]  # same layout as qb
+    # lse/delta per q block: (nqb, b, hkv, g, bq)
+    sqp = nqb * bq
+    lse_p = jnp.pad(lse, ((0, 0), (0, sqp - sq), (0, 0), (0, 0)))
+    lse_b = jnp.moveaxis(lse_p.reshape(b, nqb, bq, hkv, g), (1, 3, 4), (0, 2, 3))
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    delta = delta.reshape(b, sq, hkv, g)
+    delta_p = jnp.pad(delta, ((0, 0), (0, sqp - sq), (0, 0), (0, 0)))
+    delta_b = jnp.moveaxis(delta_p.reshape(b, nqb, bq, hkv, g), (1, 3, 4), (0, 2, 3))
+
+    def q_step(carry, xs):
+        dk_acc, dv_acc = carry  # (nkb, b, hkv, bk, dh) f32
+        qi, qblk, doblk, lse_blk, delta_blk = xs
+        qf = qblk.astype(jnp.float32) * scale
+        dof = doblk.astype(jnp.float32)
+        qpos = q_off + qi * bq + jnp.arange(bq)
+
+        def kv_step(dq_acc, ys):
+            ki, kblk, vblk, dk_i, dv_i = ys
+            kf = kblk.astype(jnp.float32)
+            vf = vblk.astype(jnp.float32)
+            kpos = ki * bk + jnp.arange(bk)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf, preferred_element_type=jnp.float32)
+            msk = _mask(qpos, kpos, causal, window, sk)
+            s = jnp.where(msk[None, None, None], s, _NEG)
+            p = jnp.exp(s - lse_blk[..., None])  # (b,hkv,g,bq,bk)
+            dv_i = dv_i + jnp.einsum("bhgqk,bhgqd->bhkd", p, dof)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", dof, vf)
+            ds = p * (dp - delta_blk[..., None])
+            dq_acc = dq_acc + jnp.einsum("bhgqk,bhkd->bhgqd", ds, kf) * scale
+            dk_i = dk_i + jnp.einsum("bhgqk,bhgqd->bhkd", ds, qf)  # qf has scale
+            return dq_acc, (dk_i, dv_i)
+
+        dq0 = jnp.zeros((b, hkv, g, bq, dh), jnp.float32)
+        dq_blk, (dk_acc, dv_acc) = jax.lax.scan(
+            kv_step, dq0, (jnp.arange(nkb), kb, vb, dk_acc, dv_acc)
+        )
+        return (dk_acc, dv_acc), dq_blk
+
+    dk0 = jnp.zeros((nkb, b, hkv, bk, dh), jnp.float32)
+    dv0 = jnp.zeros_like(dk0)
+    (dk_b, dv_b), dq_b = jax.lax.scan(
+        q_step, (dk0, dv0), (jnp.arange(nqb), qb, dob, lse_b, delta_b)
+    )
+    dq = jnp.moveaxis(dq_b, (0, 4), (1, 2)).reshape(b, -1, hq, dh)[:, :sq]
+    dk = jnp.moveaxis(dk_b, (0, 3), (1, 2)).reshape(b, -1, hkv, dh)[:, :sk]
+    dv = jnp.moveaxis(dv_b, (0, 3), (1, 2)).reshape(b, -1, hkv, dh)[:, :sk]
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_attention_xla.defvjp(_fwd, _bwd)

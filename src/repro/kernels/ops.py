@@ -1,0 +1,85 @@
+"""Public jit'd wrappers for the compute hot-spot kernels.
+
+``impl`` selects the backend:
+  * "xla"              — the pure-jnp reference (production path on CPU and the
+                          GSPMD dry-run path; XLA fuses these well),
+  * "pallas"           — the TPU Pallas kernel (TARGET hardware),
+  * "pallas_interpret" — the Pallas kernel executed in interpret mode (CPU
+                          correctness validation; used by the test suite).
+
+The global default is "xla" on CPU hosts and "pallas" when a TPU backend is
+present, override per-call or via set_default_impl().
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+_DEFAULT_IMPL = "pallas" if any(d.platform == "tpu" for d in jax.devices()) else "xla"
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("xla", "pallas", "pallas_interpret")
+    _DEFAULT_IMPL = impl
+
+
+def get_default_impl() -> str:
+    return _DEFAULT_IMPL
+
+
+def _resolve(impl: Optional[str]) -> str:
+    return impl or _DEFAULT_IMPL
+
+
+# --------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("impl",))
+def batched_ip(queries, database, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.batched_ip(queries, database)
+    from .distance import distance_pallas
+
+    return distance_pallas(queries, database, kind="ip", interpret=impl == "pallas_interpret")
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def l2_distance(queries, database, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.l2_distance(queries, database)
+    from .distance import distance_pallas
+
+    return distance_pallas(queries, database, kind="l2", interpret=impl == "pallas_interpret")
+
+
+@partial(jax.jit, static_argnames=("impl",))
+def pq_adc(lut, codes, impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        return ref.pq_adc(lut, codes)
+    from .pq_adc import pq_adc_pallas
+
+    return pq_adc_pallas(lut, codes, interpret=impl == "pallas_interpret")
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "impl"))
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    impl: Optional[str] = None):
+    impl = _resolve(impl)
+    if impl == "xla":
+        # block-scanned flash with custom VJP: never materializes (sq, sk);
+        # ref.flash_attention remains the semantics oracle for tests.
+        from .flash_xla import flash_attention_xla
+
+        return flash_attention_xla(q, k, v, causal, window)
+    from .flash_attention import flash_attention_pallas
+
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, interpret=impl == "pallas_interpret"
+    )

@@ -1,0 +1,4 @@
+"""Model families for the assigned architectures."""
+from .api import Model, build_model
+
+__all__ = ["Model", "build_model"]

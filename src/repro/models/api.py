@@ -1,0 +1,53 @@
+"""Unified model API: one entry point per family.
+
+``build_model(cfg)`` returns a ``Model`` whose methods are plain functions
+(jit/pjit-ready):
+    init(key) -> params
+    loss(params, batch) -> scalar                    (train objective)
+    prefill(params, batch) -> (last-token logits, cache)
+    decode(params, cache, tokens, pos) -> (logits, cache)
+    init_cache(batch, seq, as_specs) -> pytree       (decode-state stand-ins)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from ..configs.base import ArchConfig
+from . import encdec, mamba2, moe, transformer, zamba2
+
+_FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "ssm": mamba2,
+    "hybrid": zamba2,
+    "encdec": encdec,
+}
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    module: Any
+    remat: str = "dots"
+
+    def init(self, key: jax.Array):
+        return self.module.init_params(key, self.cfg)
+
+    def loss(self, params, batch):
+        return self.module.loss_fn(params, batch, self.cfg, remat=self.remat)
+
+    def prefill(self, params, batch):
+        return self.module.prefill(params, batch, self.cfg)
+
+    def decode(self, params, cache, tokens, pos):
+        return self.module.decode_step(params, cache, tokens, pos, self.cfg)
+
+    def init_cache(self, batch: int, seq_len: int, as_specs: bool = False):
+        return self.module.init_cache(self.cfg, batch, seq_len, as_specs=as_specs)
+
+
+def build_model(cfg: ArchConfig, remat: str = "dots") -> Model:
+    return Model(cfg=cfg, module=_FAMILIES[cfg.family], remat=remat)

@@ -1,0 +1,276 @@
+"""Shared model components: RMSNorm, RoPE, GQA attention (train / prefill /
+decode-with-cache), SwiGLU MLP, embeddings, cross-entropy.
+
+Pure-JAX functional style: params are nested dicts of arrays; layer stacks
+carry a leading ``n_layers`` dim and are scanned. Activation sharding is
+annotated through ``distributed.sharding.constrain`` with logical axis names.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import constrain
+from ..kernels import ops
+
+
+def act_dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in**-0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x (..., s, h, dh); positions (..., s) int."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., s, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (.., s, 1, half)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ArchConfig, d_in: Optional[int] = None) -> Dict[str, Any]:
+    d = d_in or cfg.d_model
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    dt = act_dtype(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dt),
+        "wk": dense_init(ks[1], (d, kv * hd), dt),
+        "wv": dense_init(ks[2], (d, kv * hd), dt),
+        "wo": dense_init(ks[3], (h * hd, cfg.d_model), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dt)
+        p["bk"] = jnp.zeros((kv * hd,), dt)
+        p["bv"] = jnp.zeros((kv * hd,), dt)
+    return p
+
+
+def _project_qkv(p, x, cfg: ArchConfig, positions, use_rope: bool = True):
+    b, s, _ = x.shape
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def attention(
+    p: Dict[str, Any],
+    x: jnp.ndarray,
+    cfg: ArchConfig,
+    *,
+    causal: bool = True,
+    positions: Optional[jnp.ndarray] = None,
+    use_rope: bool = True,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> jnp.ndarray:
+    """Full-sequence attention (train / prefill). kv_override = cross-attention."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, x, cfg, positions, use_rope)
+    if kv_override is not None:
+        k, v = kv_override
+    out = ops.flash_attention(q, k, v, causal=causal, window=cfg.window)
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd)
+    out = out @ p["wo"]
+    return constrain(out, "batch", None, None)
+
+
+def attention_prefill(
+    p, x, cfg: ArchConfig, cache_len: int
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Prefill: returns output and a KV cache of length cache_len (>= s)."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    out = ops.flash_attention(q, k, v, causal=True, window=cfg.window)
+    out = out.reshape(b, s, cfg.n_heads * cfg.hd) @ p["wo"]
+    ck = jnp.zeros((b, cache_len, cfg.n_kv_heads, cfg.hd), k.dtype)
+    cv = jnp.zeros_like(ck)
+    if cfg.window is not None and cache_len <= cfg.window:
+        take = min(s, cache_len)
+        ck = jax.lax.dynamic_update_slice(ck, k[:, -take:], (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v[:, -take:], (0, 0, 0, 0))
+    else:
+        take = min(s, cache_len)
+        ck = jax.lax.dynamic_update_slice(ck, k[:, :take], (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v[:, :take], (0, 0, 0, 0))
+    cache = {"k": constrain(ck, "batch", "kv_seq", None, None),
+             "v": constrain(cv, "batch", "kv_seq", None, None)}
+    return constrain(out, "batch", None, None), cache
+
+
+def attention_decode(
+    p,
+    x: jnp.ndarray,  # (b, d) single-token hidden
+    cache: Dict[str, jnp.ndarray],
+    cfg: ArchConfig,
+    pos: jnp.ndarray,  # scalar current position
+    *,
+    update_cache: bool = True,
+    use_rope: bool = True,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One decode step against a (possibly ring-buffered SWA) KV cache.
+
+    The cache seq dim is sharded over the model axis (flash-decoding layout);
+    softmax over the sharded axis lowers to an all-reduce of (max, sum).
+    """
+    b, d = x.shape
+    hd, h, kv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ck, cv = cache["k"], cache["v"]
+    s_cache = ck.shape[1]
+    q = (x @ p["wq"])
+    k_new = (x @ p["wk"])
+    v_new = (x @ p["wv"])
+    if cfg.qkv_bias:
+        q, k_new, v_new = q + p["bq"], k_new + p["bk"], v_new + p["bv"]
+    q = q.reshape(b, 1, h, hd)
+    k_new = k_new.reshape(b, 1, kv, hd)
+    v_new = v_new.reshape(b, 1, kv, hd)
+    posb = jnp.broadcast_to(pos[None], (b, 1))
+    if use_rope:
+        q = rope(q, posb, cfg.rope_theta)
+        k_new = rope(k_new, posb, cfg.rope_theta)
+    slot = pos % s_cache if cfg.window is not None else jnp.minimum(pos, s_cache - 1)
+    if update_cache:
+        ck = jax.lax.dynamic_update_slice(ck, k_new, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v_new, (0, slot, 0, 0))
+    ck = constrain(ck, "batch", "kv_seq", None, None)
+    cv = constrain(cv, "batch", "kv_seq", None, None)
+    # grouped-head attention over the cache
+    g = h // kv
+    qf = q.reshape(b, kv, g, hd).astype(jnp.float32)
+    kf = ck.astype(jnp.float32)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, kf) / (hd**0.5)  # (b, kv, g, S)
+    # valid positions: ring buffer is fully valid once pos >= s_cache
+    idx = jnp.arange(s_cache)
+    valid = jnp.where(pos >= s_cache, jnp.ones_like(idx, bool), idx <= pos)
+    logits = jnp.where(valid[None, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, cv.astype(jnp.float32))
+    out = out.reshape(b, h * hd).astype(x.dtype) @ p["wo"]
+    return constrain(out, "batch", None), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ArchConfig, d_ff: Optional[int] = None) -> Dict[str, Any]:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    dt = act_dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, ff), dt),
+        "w_up": dense_init(ks[1], (d, ff), dt),
+        "w_down": dense_init(ks[2], (ff, d), dt),
+    }
+
+
+def mlp(p, x):
+    mid = (None,) * (x.ndim - 2)
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = constrain(h, "batch", *mid, "ff")
+    return constrain(h @ p["w_down"], "batch", *mid, None)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head / loss
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg: ArchConfig) -> Dict[str, Any]:
+    dt = act_dtype(cfg)
+    ks = jax.random.split(key, 2)
+    p = {"embed": dense_init(ks[0], (cfg.vocab_padded, cfg.d_model), dt, scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_padded), dt)
+    return p
+
+
+def embed(p, tokens, cfg: ArchConfig):
+    x = p["embed"][tokens]
+    return constrain(x, "batch", None, None) if x.ndim == 3 else constrain(x, "batch", None)
+
+
+def lm_logits(p, x, cfg: ArchConfig):
+    w = p["head"] if not cfg.tie_embeddings else p["embed"].T
+    logits = x @ w
+    return constrain(logits, "batch", None, "vocab") if logits.ndim == 3 else constrain(
+        logits, "batch", "vocab"
+    )
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Mean CE; logits (..., V) any float dtype, reductions in f32."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    true = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - true)
+
+
+def lm_loss(params, x: jnp.ndarray, labels: jnp.ndarray, cfg: ArchConfig,
+            chunk_tokens: int = 8192) -> jnp.ndarray:
+    """Token-chunked LM cross-entropy: the (tokens, vocab) logits tensor is
+    only ever materialized one chunk at a time (forward AND backward — the
+    chunk body is checkpointed so the backward recomputes its logits). This
+    keeps the loss region O(chunk * vocab/TP) instead of O(seq * vocab/TP).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    lt = labels.reshape(t)
+    n_chunks = max(1, t // chunk_tokens)
+    while t % n_chunks:
+        n_chunks -= 1
+    xc = xt.reshape(n_chunks, t // n_chunks, d)
+    lc = lt.reshape(n_chunks, t // n_chunks)
+
+    @jax.checkpoint
+    def chunk_loss(xi, li):
+        logits = lm_logits(params, xi, cfg)
+        lf = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lf, axis=-1)
+        true = jnp.take_along_axis(lf, li[:, None], axis=1)[:, 0]
+        return jnp.sum(lse - true)
+
+    def body(acc, xs):
+        xi, li = xs
+        return acc + chunk_loss(xi, li), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, lc))
+    return total / t

@@ -1,0 +1,265 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD forward: within a chunk the recurrence is expanded into
+attention-like matmuls (MXU-friendly); chunks are linked by a sequential
+``lax.scan`` carrying the (b, h, p, n) state. Per-chunk intermediates only —
+the (q, q) decay matrix never materializes for the whole sequence.
+
+Decode is the O(1) recurrence: h <- h * exp(dt*A) + dt * (B outer x).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import common as cm
+from .transformer import REMAT_POLICIES
+
+
+def _dims(cfg: ArchConfig):
+    di = cfg.d_inner
+    nh = cfg.ssm_heads
+    ns = cfg.ssm_state
+    conv_dim = di + 2 * ns  # x, B, C go through the causal conv
+    d_in_proj = 2 * di + 2 * ns + nh  # z, x, B, C, dt
+    return di, nh, ns, conv_dim, d_in_proj
+
+
+def init_layer(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    di, nh, ns, conv_dim, d_in_proj = _dims(cfg)
+    dt = cm.act_dtype(cfg)
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": cm.dense_init(ks[0], (d, d_in_proj), dt),
+        "conv_w": cm.dense_init(ks[1], (cfg.ssm_conv, conv_dim), dt, scale=0.5),
+        "conv_bias": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "ssm_d": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": {"scale": jnp.ones((di,), dt)},
+        "out_proj": cm.dense_init(ks[2], (di, d), dt),
+    }
+
+
+def _split_proj(p, zxbcdt, cfg: ArchConfig):
+    di, nh, ns, conv_dim, _ = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + conv_dim]
+    dt_raw = zxbcdt[..., di + conv_dim :]  # (..., nh)
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over seq: xbc (b, l, c), w (width, c)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return jax.nn.silu(out + bias)
+
+
+def _ssd_scan(x, dt, a, b_in, c_in, cfg: ArchConfig, h0=None):
+    """Chunked SSD. x (b, l, nh, hp); dt (b, l, nh); a (nh,) negative;
+    b_in/c_in (b, l, ns). Returns (y (b, l, nh, hp), final state (b, nh, hp, ns))."""
+    bsz, l, nh, hp = x.shape
+    ns = b_in.shape[-1]
+    q = min(cfg.ssm_chunk, l)
+    n_chunks = (l + q - 1) // q
+    if l % q:
+        padn = n_chunks * q - l
+        x = jnp.pad(x, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padn), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, padn), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, padn), (0, 0)))
+    xc = x.reshape(bsz, n_chunks, q, nh, hp)
+    dtc = dt.reshape(bsz, n_chunks, q, nh)
+    bc = b_in.reshape(bsz, n_chunks, q, ns)
+    cc = c_in.reshape(bsz, n_chunks, q, ns)
+
+    def chunk_step(h, inputs):
+        xq, dtq, bq, cq = inputs  # (b, q, nh, hp), (b, q, nh), (b, q, ns) x2
+        adt = dtq * a[None, None, :]  # (b, q, nh) negative
+        cum = jnp.cumsum(adt, axis=1)  # (b, q, nh)
+        # intra-chunk: y[i] = sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # (b, q, q, nh)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        # mask BEFORE exp: exp of masked (positive) entries would overflow and
+        # poison the gradient through jnp.where
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], seg, -1e30))
+        cb = jnp.einsum("bin,bjn->bij", cq, bq)  # (b, q, q)
+        w = cb[..., None] * decay  # (b, q, q, nh)
+        xdt = xq * dtq[..., None]  # (b, q, nh, hp)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", w, xdt)
+        # inter-chunk: y[i] += C_i . h exp(cum_i)
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", cq, h, jnp.exp(cum))
+        # state update: h' = h*exp(cum_last) + sum_j exp(cum_last - cum_j) B_j (dt_j x_j)
+        last = cum[:, -1:, :]  # (b, 1, nh)
+        sdecay = jnp.exp(last - cum)  # (b, q, nh)
+        h_new = h * jnp.exp(last)[:, 0, :, None, None] + jnp.einsum(
+            "bjn,bjh,bjhp->bhpn", bq, sdecay, xdt
+        )
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, hp, ns), jnp.float32)
+    xc_t = jnp.moveaxis(xc, 1, 0)
+    dtc_t = jnp.moveaxis(dtc, 1, 0)
+    bc_t = jnp.moveaxis(bc, 1, 0)
+    cc_t = jnp.moveaxis(cc, 1, 0)
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xc_t, dtc_t, bc_t, cc_t), unroll=cfg.scan_unroll)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, n_chunks * q, nh, hp)[:, :l]
+    return y, h_final
+
+
+def mamba_block(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Full-sequence mamba2 block. x (b, l, d) -> (b, l, d)."""
+    di, nh, ns, conv_dim, _ = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt_raw = _split_proj(p, zxbcdt, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_bias"])
+    xin = xbc[..., :di]
+    b_in = xbc[..., di : di + ns]
+    c_in = xbc[..., di + ns :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b, l, nh)
+    a = -jnp.exp(p["a_log"])  # (nh,)
+    xh = xin.reshape(*xin.shape[:-1], nh, cfg.ssm_head_dim)
+    y, _ = _ssd_scan(xh, dt, a, b_in.astype(jnp.float32), c_in.astype(jnp.float32), cfg)
+    y = y + xh * p["ssm_d"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(*xin.shape)
+    y = cm.rms_norm(y * jax.nn.silu(z), p["norm"]["scale"])
+    out = y @ p["out_proj"]
+    return cm.constrain(out, "batch", None, None)
+
+
+# --- single-token decode ---------------------------------------------------
+def mamba_decode(p, x: jnp.ndarray, state: Dict[str, jnp.ndarray], cfg: ArchConfig):
+    """x (b, d); state {'h': (b, nh, hp, ns), 'conv': (b, width-1, conv_dim)}."""
+    di, nh, ns, conv_dim, _ = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]  # (b, d_in_proj)
+    z, xbc, dt_raw = _split_proj(p, zxbcdt, cfg)
+    # conv cache update
+    window = jnp.concatenate([state["conv"], xbc[:, None, :]], axis=1)  # (b, w, c)
+    w = p["conv_w"]
+    conv_out = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w) + p["conv_bias"])
+    new_conv = window[:, 1:]
+    xin = conv_out[..., :di]
+    b_in = conv_out[..., di : di + ns].astype(jnp.float32)
+    c_in = conv_out[..., di + ns :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (b, nh)
+    a = -jnp.exp(p["a_log"])
+    xh = xin.reshape(-1, nh, cfg.ssm_head_dim).astype(jnp.float32)  # (b, nh, hp)
+    h = state["h"]
+    decay = jnp.exp(dt * a[None, :])  # (b, nh)
+    h_new = h * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", b_in, dt, xh
+    )
+    y = jnp.einsum("bn,bhpn->bhp", c_in, h_new) + xh * p["ssm_d"][None, :, None]
+    y = y.reshape(-1, di).astype(x.dtype)
+    y = cm.rms_norm(y * jax.nn.silu(z), p["norm"]["scale"])
+    out = y @ p["out_proj"]
+    return cm.constrain(out, "batch", None), {"h": h_new, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+def init_params(key: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    l = cfg.n_layers
+    ks = jax.random.split(key, 3)
+    layers = {
+        "mamba": jax.vmap(lambda k: init_layer(k, cfg))(jax.random.split(ks[0], l)),
+        "norm": {"scale": jnp.ones((l, cfg.d_model), cm.act_dtype(cfg))},
+    }
+    p = {"layers": layers, "final_norm": {"scale": jnp.ones((cfg.d_model,), cm.act_dtype(cfg))}}
+    p.update(cm.init_embed(ks[1], cfg))
+    return p
+
+
+def _block(layer_p, x, cfg: ArchConfig):
+    h = cm.rms_norm(x, layer_p["norm"]["scale"])
+    return cm.constrain(x + mamba_block(layer_p["mamba"], h, cfg), "batch", "seq_act", None)
+
+
+def forward(params, tokens, cfg: ArchConfig, remat: str = "dots"):
+    x = cm.embed(params, tokens, cfg)
+    body = _block
+    if remat != "everything":
+        body = jax.checkpoint(
+            _block, policy=REMAT_POLICIES[remat], static_argnums=(2,), prevent_cse=True
+        )
+
+    def scan_fn(x, layer_p):
+        return body(layer_p, x, cfg), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["layers"], unroll=cfg.scan_unroll)
+    return cm.rms_norm(x, params["final_norm"]["scale"])
+
+
+def loss_fn(params, batch, cfg: ArchConfig, remat: str = "dots"):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    x = forward(params, inp, cfg, remat=remat)
+    return cm.lm_loss(params, x, labels, cfg)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, as_specs: bool = False):
+    di, nh, ns, conv_dim, _ = _dims(cfg)
+    l = cfg.n_layers
+    h_shape = (l, batch, nh, cfg.ssm_head_dim, ns)
+    c_shape = (l, batch, cfg.ssm_conv - 1, conv_dim)
+    dt = cm.act_dtype(cfg)
+    if as_specs:
+        return {
+            "h": jax.ShapeDtypeStruct(h_shape, jnp.float32),
+            "conv": jax.ShapeDtypeStruct(c_shape, dt),
+        }
+    return {"h": jnp.zeros(h_shape, jnp.float32), "conv": jnp.zeros(c_shape, dt)}
+
+
+def prefill(params, batch, cfg: ArchConfig, cache_len: Optional[int] = None):
+    tokens = batch["tokens"]
+    x = cm.embed(params, tokens, cfg)
+
+    def scan_fn(x, layer_p):
+        h = cm.rms_norm(x, layer_p["norm"]["scale"])
+        # run block and capture final ssm state + conv tail
+        di, nh, ns, conv_dim, _ = _dims(cfg)
+        zxbcdt = h @ layer_p["mamba"]["in_proj"]
+        z, xbc, dt_raw = _split_proj(layer_p["mamba"], zxbcdt, cfg)
+        conv_tail = xbc[:, -(cfg.ssm_conv - 1) :, :]
+        xbc = _causal_conv(xbc, layer_p["mamba"]["conv_w"], layer_p["mamba"]["conv_bias"])
+        xin = xbc[..., :di]
+        b_in = xbc[..., di : di + ns].astype(jnp.float32)
+        c_in = xbc[..., di + ns :].astype(jnp.float32)
+        dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + layer_p["mamba"]["dt_bias"])
+        a = -jnp.exp(layer_p["mamba"]["a_log"])
+        xh = xin.reshape(*xin.shape[:-1], nh, cfg.ssm_head_dim)
+        y, h_final = _ssd_scan(xh, dtv, a, b_in, c_in, cfg)
+        y = y + xh * layer_p["mamba"]["ssm_d"][None, None, :, None].astype(xh.dtype)
+        y = y.reshape(*xin.shape)
+        y = cm.rms_norm(y * jax.nn.silu(z), layer_p["mamba"]["norm"]["scale"])
+        x = x + y @ layer_p["mamba"]["out_proj"]
+        return cm.constrain(x, "batch", None, None), {"h": h_final, "conv": conv_tail}
+
+    x, caches = jax.lax.scan(scan_fn, x, params["layers"], unroll=cfg.scan_unroll)
+    x = cm.rms_norm(x[:, -1:], params["final_norm"]["scale"])
+    return cm.lm_logits(params, x, cfg)[:, 0], caches
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    x = cm.embed(params, tokens, cfg)
+
+    def scan_fn(x, scanned):
+        layer_p, layer_cache = scanned
+        h = cm.rms_norm(x, layer_p["norm"]["scale"])
+        y, new_state = mamba_decode(layer_p["mamba"], h, layer_cache, cfg)
+        return cm.constrain(x + y, "batch", None), new_state
+
+    x, new_caches = jax.lax.scan(scan_fn, x, (params["layers"], cache), unroll=cfg.scan_unroll)
+    x = cm.rms_norm(x, params["final_norm"]["scale"])
+    return cm.lm_logits(params, x, cfg), new_caches

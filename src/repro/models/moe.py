@@ -1,0 +1,202 @@
+"""Mixtral-style MoE transformer: GQA + sliding-window attention, and a
+top-2-of-8 expert SwiGLU MLP with capacity-based dropless-ish dispatch.
+
+TPU-native dispatch: tokens are routed by sorting the (token, slot) pairs by
+expert id and packing them into a fixed (E, capacity) buffer — the expert
+computation is then a dense batched einsum on the MXU; gather/scatter are the
+only data movements. When ``n_experts`` divides the model axis, the rules map
+the expert dim onto it (true EP); otherwise experts are replicated and the ff
+dim is tensor-parallel (TP-within-expert, the standard fallback).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import common as cm
+from .transformer import REMAT_POLICIES, cache_len_for
+
+
+# ---------------------------------------------------------------------------
+def init_moe_mlp(key, cfg: ArchConfig) -> Dict[str, Any]:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cm.act_dtype(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "router": cm.dense_init(ks[0], (d, e), dt),
+        "we_gate": cm.dense_init(ks[1], (e, d, ff), dt),
+        "we_up": cm.dense_init(ks[2], (e, d, ff), dt),
+        "we_down": cm.dense_init(ks[3], (e, ff, d), dt),
+    }
+
+
+def moe_mlp(p, x: jnp.ndarray, cfg: ArchConfig, groups: int = 32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (..., d). Returns (output, aux_load_balance_loss).
+
+    Grouped (shard-local) dispatch: tokens are reshaped to (G, T/G) with G on
+    the data mesh axes, and each group routes into its OWN (E, capacity)
+    buffer. All gathers/scatters are then *batched* ops over a sharded leading
+    dim — shard-local under GSPMD, no data-dependent cross-shard indexing —
+    and the expert einsum is a clean (G, E, cap, d) x (E, d, f) contraction
+    (EP over the model axis when E divides it, TP over f otherwise).
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    xt = x.reshape(-1, d)  # (T, d)
+    t = xt.shape[0]
+    e, k = cfg.n_experts, cfg.top_k
+    g = min(groups, t)
+    while t % g:
+        g -= 1
+    tl = t // g
+    cap = max(int(math.ceil(cfg.capacity_factor * tl * k / e)), 1)
+    cap = min(cap, tl * k)
+
+    xg = cm.constrain(xt.reshape(g, tl, d), "batch", None, None)
+    logits = (xg @ p["router"]).astype(jnp.float32)  # (G, TL, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, k)  # (G, TL, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style), computed globally
+    me = probs.mean((0, 1))
+    ce = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    # pack (token, slot) pairs into per-group per-expert buffers of size cap
+    eid = topi.reshape(g, tl * k)  # (G, TLk)
+    w = topw.reshape(g, tl * k).astype(xt.dtype)
+    order = jnp.argsort(eid, axis=1)  # stable within group
+    sorted_eid = jnp.take_along_axis(eid, order, axis=1)
+    seg_start = jax.vmap(lambda se: jnp.searchsorted(se, jnp.arange(e), side="left"))(
+        sorted_eid
+    )  # (G, E)
+    rank = jnp.arange(tl * k)[None, :] - jnp.take_along_axis(seg_start, sorted_eid, axis=1)
+    keep = rank < cap
+    dest = jnp.where(keep, sorted_eid * cap + rank, e * cap)  # (G, TLk)
+    gidx = jnp.arange(g)[:, None]
+    buf_tok = jnp.zeros((g, e * cap + 1), jnp.int32).at[gidx, dest].set(
+        (order // k).astype(jnp.int32)
+    )[:, : e * cap]
+    buf_valid = jnp.zeros((g, e * cap + 1), bool).at[gidx, dest].set(keep)[:, : e * cap]
+    w_sorted = jnp.take_along_axis(w, order, axis=1)
+    buf_w = jnp.zeros((g, e * cap + 1), xt.dtype).at[gidx, dest].set(
+        jnp.where(keep, w_sorted, 0)
+    )[:, : e * cap]
+
+    # batched (shard-local) gather -> (G, E, cap, d)
+    xe = jnp.take_along_axis(xg, buf_tok[..., None], axis=1)
+    xe = xe * buf_valid[..., None]
+    xe = cm.constrain(xe.reshape(g, e, cap, d), "batch", "experts", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["we_gate"])) * jnp.einsum(
+        "gecd,edf->gecf", xe, p["we_up"]
+    )
+    h = cm.constrain(h, "batch", "experts", None, "ff")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["we_down"])  # (G, E, cap, d)
+    ye = cm.constrain(ye, "batch", "experts", None, None).reshape(g, e * cap, d)
+    ye = ye * buf_w[..., None]
+
+    # batched (shard-local) scatter-add back to token order
+    out = jnp.zeros_like(xg).at[gidx[..., None], buf_tok[..., None], jnp.arange(d)[None, None, :]].add(
+        jnp.where(buf_valid[..., None], ye, 0)
+    )
+    return out.reshape(orig_shape), aux
+
+
+# ---------------------------------------------------------------------------
+def init_params(key: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    l = cfg.n_layers
+    ks = jax.random.split(key, 4)
+
+    def stacked(initializer, rng):
+        return jax.vmap(initializer)(jax.random.split(rng, l))
+
+    layers = {
+        "attn": stacked(lambda k: cm.init_attention(k, cfg), ks[0]),
+        "moe": stacked(lambda k: init_moe_mlp(k, cfg), ks[1]),
+        "attn_norm": {"scale": jnp.ones((l, cfg.d_model), cm.act_dtype(cfg))},
+        "mlp_norm": {"scale": jnp.ones((l, cfg.d_model), cm.act_dtype(cfg))},
+    }
+    p = {"layers": layers, "final_norm": {"scale": jnp.ones((cfg.d_model,), cm.act_dtype(cfg))}}
+    p.update(cm.init_embed(ks[2], cfg))
+    return p
+
+
+def _block(layer_p, carry, cfg: ArchConfig):
+    x, aux = carry
+    h = cm.rms_norm(x, layer_p["attn_norm"]["scale"])
+    x = x + cm.attention(layer_p["attn"], h, cfg, causal=True)
+    h = cm.rms_norm(x, layer_p["mlp_norm"]["scale"])
+    y, a = moe_mlp(layer_p["moe"], h, cfg)
+    return cm.constrain(x + y, "batch", "seq_act", None), aux + a
+
+
+def forward(params, tokens, cfg: ArchConfig, remat: str = "dots"):
+    x = cm.embed(params, tokens, cfg)
+    body = _block
+    if remat != "everything":
+        body = jax.checkpoint(
+            _block, policy=REMAT_POLICIES[remat], static_argnums=(2,), prevent_cse=True
+        )
+
+    def scan_fn(carry, layer_p):
+        return body(layer_p, carry, cfg), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)), params["layers"], unroll=cfg.scan_unroll)
+    return cm.rms_norm(x, params["final_norm"]["scale"]), aux / cfg.n_layers
+
+
+def loss_fn(params, batch, cfg: ArchConfig, remat: str = "dots", aux_weight: float = 0.01):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    x, aux = forward(params, inp, cfg, remat=remat)
+    return cm.lm_loss(params, x, labels, cfg) + aux_weight * aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, as_specs: bool = False):
+    s = cache_len_for(cfg, seq_len)
+    shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.hd)
+    dt = cm.act_dtype(cfg)
+    if as_specs:
+        return {"k": jax.ShapeDtypeStruct(shape, dt), "v": jax.ShapeDtypeStruct(shape, dt)}
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def prefill(params, batch, cfg: ArchConfig, cache_len: Optional[int] = None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cl = cache_len or cache_len_for(cfg, s)
+    x = cm.embed(params, tokens, cfg)
+
+    def scan_fn(x, layer_p):
+        h = cm.rms_norm(x, layer_p["attn_norm"]["scale"])
+        a, cache = cm.attention_prefill(layer_p["attn"], h, cfg, cl)
+        x = x + a
+        h = cm.rms_norm(x, layer_p["mlp_norm"]["scale"])
+        y, _ = moe_mlp(layer_p["moe"], h, cfg)
+        return cm.constrain(x + y, "batch", None, None), cache
+
+    x, caches = jax.lax.scan(scan_fn, x, params["layers"], unroll=cfg.scan_unroll)
+    x = cm.rms_norm(x[:, -1:], params["final_norm"]["scale"])
+    return cm.lm_logits(params, x, cfg)[:, 0], caches
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    x = cm.embed(params, tokens, cfg)  # (b, d)
+
+    def scan_fn(x, scanned):
+        layer_p, layer_cache = scanned
+        h = cm.rms_norm(x, layer_p["attn_norm"]["scale"])
+        a, new_cache = cm.attention_decode(layer_p["attn"], h, layer_cache, cfg, pos)
+        x = x + a
+        h = cm.rms_norm(x, layer_p["mlp_norm"]["scale"])
+        y, _ = moe_mlp(layer_p["moe"], h, cfg)
+        return cm.constrain(x + y, "batch", None), new_cache
+
+    x, new_caches = jax.lax.scan(scan_fn, x, (params["layers"], cache), unroll=cfg.scan_unroll)
+    x = cm.rms_norm(x, params["final_norm"]["scale"])
+    return cm.lm_logits(params, x, cfg), new_caches

@@ -1,0 +1,130 @@
+"""Dense decoder-only transformer (GQA, RoPE, SwiGLU, optional QKV bias,
+optional sliding window). Covers deepseek-67b, internlm2-20b, glm4-9b,
+qwen2.5-32b and chameleon-34b (early fusion = VQ tokens in the unified vocab).
+
+The layer stack is ``lax.scan``'d over stacked parameters (HLO size is
+depth-independent) with a configurable remat policy.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import common as cm
+
+REMAT_POLICIES = {
+    "none": None,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "everything": jax.checkpoint_policies.everything_saveable,
+}
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    l = cfg.n_layers
+    ks = jax.random.split(key, 4)
+
+    def stacked(initializer, rng):
+        return jax.vmap(initializer)(jax.random.split(rng, l))
+
+    layers = {
+        "attn": stacked(lambda k: cm.init_attention(k, cfg), ks[0]),
+        "mlp": stacked(lambda k: cm.init_mlp(k, cfg), ks[1]),
+        "attn_norm": {"scale": jnp.ones((l, cfg.d_model), cm.act_dtype(cfg))},
+        "mlp_norm": {"scale": jnp.ones((l, cfg.d_model), cm.act_dtype(cfg))},
+    }
+    p = {"layers": layers, "final_norm": {"scale": jnp.ones((cfg.d_model,), cm.act_dtype(cfg))}}
+    p.update(cm.init_embed(ks[2], cfg))
+    return p
+
+
+def _block(layer_p, x, cfg: ArchConfig):
+    h = cm.rms_norm(x, layer_p["attn_norm"]["scale"])
+    x = x + cm.attention(layer_p["attn"], h, cfg, causal=True)
+    h = cm.rms_norm(x, layer_p["mlp_norm"]["scale"])
+    x = x + cm.mlp(layer_p["mlp"], h)
+    return cm.constrain(x, "batch", "seq_act", None)
+
+
+def forward(params, tokens: jnp.ndarray, cfg: ArchConfig, remat: str = "dots") -> jnp.ndarray:
+    """tokens (b, s) -> final hidden states (b, s, d)."""
+    x = cm.embed(params, tokens, cfg)
+    policy = REMAT_POLICIES[remat]
+    body = _block
+    if remat != "everything":
+        body = jax.checkpoint(
+            _block, policy=policy, static_argnums=(2,), prevent_cse=True
+        )
+
+    def scan_fn(x, layer_p):
+        return body(layer_p, x, cfg), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["layers"], unroll=cfg.scan_unroll)
+    return cm.rms_norm(x, params["final_norm"]["scale"])
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, remat: str = "dots"):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    x = forward(params, inp, cfg, remat=remat)
+    return cm.lm_loss(params, x, labels, cfg)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def cache_len_for(cfg: ArchConfig, seq_len: int) -> int:
+    return min(seq_len, cfg.window) if cfg.window is not None else seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, as_specs: bool = False):
+    s = cache_len_for(cfg, seq_len)
+    shape = (cfg.n_layers, batch, s, cfg.n_kv_heads, cfg.hd)
+    dt = cm.act_dtype(cfg)
+    if as_specs:
+        return {"k": jax.ShapeDtypeStruct(shape, dt), "v": jax.ShapeDtypeStruct(shape, dt)}
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def prefill(params, batch: Dict[str, jnp.ndarray], cfg: ArchConfig, cache_len: Optional[int] = None):
+    """Returns (last-token logits, stacked KV cache)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cl = cache_len or cache_len_for(cfg, s)
+    x = cm.embed(params, tokens, cfg)
+
+    def scan_fn(x, layer_p):
+        h = cm.rms_norm(x, layer_p["attn_norm"]["scale"])
+        a, cache = cm.attention_prefill(layer_p["attn"], h, cfg, cl)
+        x = x + a
+        h = cm.rms_norm(x, layer_p["mlp_norm"]["scale"])
+        x = x + cm.mlp(layer_p["mlp"], h)
+        return cm.constrain(x, "batch", None, None), cache
+
+    x, caches = jax.lax.scan(scan_fn, x, params["layers"], unroll=cfg.scan_unroll)
+    x = cm.rms_norm(x[:, -1:], params["final_norm"]["scale"])
+    logits = cm.lm_logits(params, x, cfg)[:, 0]
+    return logits, caches
+
+
+def decode_step(params, cache, tokens: jnp.ndarray, pos: jnp.ndarray, cfg: ArchConfig):
+    """One token for the whole batch. tokens (b,), pos scalar."""
+    x = cm.embed(params, tokens, cfg)  # (b, d)
+
+    def scan_fn(x, scanned):
+        layer_p, layer_cache = scanned
+        h = cm.rms_norm(x, layer_p["attn_norm"]["scale"])
+        a, new_cache = cm.attention_decode(layer_p["attn"], h, layer_cache, cfg, pos)
+        x = x + a
+        h = cm.rms_norm(x, layer_p["mlp_norm"]["scale"])
+        x = x + cm.mlp(layer_p["mlp"], h)
+        return cm.constrain(x, "batch", None), new_cache
+
+    x, new_caches = jax.lax.scan(scan_fn, x, (params["layers"], cache), unroll=cfg.scan_unroll)
+    x = cm.rms_norm(x, params["final_norm"]["scale"])
+    logits = cm.lm_logits(params, x, cfg)
+    return logits, new_caches

@@ -1,0 +1,192 @@
+"""Zamba2 hybrid: Mamba2 backbone with ONE shared attention+MLP block applied
+every ``attn_every`` SSM layers (arXiv:2411.15242). The shared block consumes
+concat(hidden, original embedding) — 2*d input — and its weights are reused at
+every application site (9 sites for the 54-layer config).
+
+Structure: python loop over the (few) groups; within each group the mamba
+layers are lax.scan'd, then the shared block is applied.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import common as cm
+from . import mamba2 as mb
+from .transformer import REMAT_POLICIES
+
+
+def n_shared_sites(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Dict[str, Any]:
+    l = cfg.n_layers
+    ks = jax.random.split(key, 5)
+    layers = {
+        "mamba": jax.vmap(lambda k: mb.init_layer(k, cfg))(jax.random.split(ks[0], l)),
+        "norm": {"scale": jnp.ones((l, cfg.d_model), cm.act_dtype(cfg))},
+    }
+    shared = {
+        "attn": cm.init_attention(ks[1], cfg, d_in=2 * cfg.d_model),
+        "mlp": cm.init_mlp(ks[2], cfg),
+        "attn_norm": {"scale": jnp.ones((2 * cfg.d_model,), cm.act_dtype(cfg))},
+        "mlp_norm": {"scale": jnp.ones((cfg.d_model,), cm.act_dtype(cfg))},
+    }
+    p = {
+        "layers": layers,
+        "shared": shared,
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), cm.act_dtype(cfg))},
+    }
+    p.update(cm.init_embed(ks[3], cfg))
+    return p
+
+
+def _group_slices(cfg: ArchConfig):
+    k = cfg.attn_every
+    return [(g * k, min((g + 1) * k, cfg.n_layers)) for g in range(n_shared_sites(cfg))]
+
+
+def _mamba_group(layers_p, x, cfg: ArchConfig, lo: int, hi: int, remat: str):
+    sub = jax.tree.map(lambda a: a[lo:hi], layers_p)
+    body = mb._block
+    if remat != "everything":
+        body = jax.checkpoint(
+            mb._block, policy=REMAT_POLICIES[remat], static_argnums=(2,), prevent_cse=True
+        )
+
+    def scan_fn(x, layer_p):
+        return body(layer_p, x, cfg), None
+
+    x, _ = jax.lax.scan(scan_fn, x, sub, unroll=cfg.scan_unroll)
+    return x
+
+
+def _shared_block(p, x, x0, cfg: ArchConfig, causal: bool = True):
+    inp = jnp.concatenate([x, x0], axis=-1)  # (b, s, 2d)
+    h = cm.rms_norm(inp, p["attn_norm"]["scale"])
+    x = x + cm.attention(p["attn"], h, cfg, causal=causal)
+    h = cm.rms_norm(x, p["mlp_norm"]["scale"])
+    x = x + cm.mlp(p["mlp"], h)
+    return cm.constrain(x, "batch", "seq_act", None)
+
+
+def forward(params, tokens, cfg: ArchConfig, remat: str = "dots"):
+    x = cm.embed(params, tokens, cfg)
+    x0 = x
+    for lo, hi in _group_slices(cfg):
+        x = _mamba_group(params["layers"], x, cfg, lo, hi, remat)
+        x = _shared_block(params["shared"], x, x0, cfg)
+    return cm.rms_norm(x, params["final_norm"]["scale"])
+
+
+def loss_fn(params, batch, cfg: ArchConfig, remat: str = "dots"):
+    tokens = batch["tokens"]
+    inp, labels = tokens[:, :-1], tokens[:, 1:]
+    x = forward(params, inp, cfg, remat=remat)
+    return cm.lm_loss(params, x, labels, cfg)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, as_specs: bool = False):
+    """SSM states for every mamba layer + a KV cache per shared-attn site."""
+    ssm = mb.init_cache(cfg, batch, seq_len, as_specs=as_specs)
+    sites = n_shared_sites(cfg)
+    kv_shape = (sites, batch, seq_len, cfg.n_kv_heads, cfg.hd)
+    dt = cm.act_dtype(cfg)
+    if as_specs:
+        kv = {"k": jax.ShapeDtypeStruct(kv_shape, dt), "v": jax.ShapeDtypeStruct(kv_shape, dt)}
+    else:
+        kv = {"k": jnp.zeros(kv_shape, dt), "v": jnp.zeros(kv_shape, dt)}
+    return {"ssm": ssm, "attn": kv}
+
+
+def prefill(params, batch, cfg: ArchConfig, cache_len: Optional[int] = None):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    cl = cache_len or s
+    x = cm.embed(params, tokens, cfg)
+    x0 = x
+    ssm_hs, ssm_convs, kv_ks, kv_vs = [], [], [], []
+    for lo, hi in _group_slices(cfg):
+        sub = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+
+        def scan_fn(x, layer_p):
+            h = cm.rms_norm(x, layer_p["norm"]["scale"])
+            zxbcdt = h @ layer_p["mamba"]["in_proj"]
+            di, nh, ns, conv_dim, _ = mb._dims(cfg)
+            z, xbc, dt_raw = mb._split_proj(layer_p["mamba"], zxbcdt, cfg)
+            conv_tail = xbc[:, -(cfg.ssm_conv - 1) :, :]
+            xbc = mb._causal_conv(xbc, layer_p["mamba"]["conv_w"], layer_p["mamba"]["conv_bias"])
+            xin = xbc[..., :di]
+            b_in = xbc[..., di : di + ns].astype(jnp.float32)
+            c_in = xbc[..., di + ns :].astype(jnp.float32)
+            dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + layer_p["mamba"]["dt_bias"])
+            a = -jnp.exp(layer_p["mamba"]["a_log"])
+            xh = xin.reshape(*xin.shape[:-1], nh, cfg.ssm_head_dim)
+            y, h_final = mb._ssd_scan(xh, dtv, a, b_in, c_in, cfg)
+            y = y + xh * layer_p["mamba"]["ssm_d"][None, None, :, None].astype(xh.dtype)
+            y = y.reshape(*xin.shape)
+            y = cm.rms_norm(y * jax.nn.silu(z), layer_p["mamba"]["norm"]["scale"])
+            x = x + y @ layer_p["mamba"]["out_proj"]
+            return cm.constrain(x, "batch", None, None), {"h": h_final, "conv": conv_tail}
+
+        x, st = jax.lax.scan(scan_fn, x, sub, unroll=cfg.scan_unroll)
+        ssm_hs.append(st["h"])
+        ssm_convs.append(st["conv"])
+        # shared attention with cache capture
+        inp = jnp.concatenate([x, x0], axis=-1)
+        h = cm.rms_norm(inp, params["shared"]["attn_norm"]["scale"])
+        a_out, kv = cm.attention_prefill(params["shared"]["attn"], h, cfg, cl)
+        x = x + a_out
+        h = cm.rms_norm(x, params["shared"]["mlp_norm"]["scale"])
+        x = x + cm.mlp(params["shared"]["mlp"], h)
+        kv_ks.append(kv["k"])
+        kv_vs.append(kv["v"])
+    x = cm.rms_norm(x[:, -1:], params["final_norm"]["scale"])
+    logits = cm.lm_logits(params, x, cfg)[:, 0]
+    cache = {
+        "ssm": {"h": jnp.concatenate(ssm_hs, 0), "conv": jnp.concatenate(ssm_convs, 0)},
+        "attn": {"k": jnp.stack(kv_ks), "v": jnp.stack(kv_vs)},
+    }
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig):
+    x = cm.embed(params, tokens, cfg)
+    x0 = x
+    new_h, new_conv, new_k, new_v = [], [], [], []
+    for g, (lo, hi) in enumerate(_group_slices(cfg)):
+        sub = jax.tree.map(lambda a: a[lo:hi], params["layers"])
+        sub_cache = {
+            "h": cache["ssm"]["h"][lo:hi],
+            "conv": cache["ssm"]["conv"][lo:hi],
+        }
+
+        def scan_fn(x, scanned):
+            layer_p, layer_cache = scanned
+            h = cm.rms_norm(x, layer_p["norm"]["scale"])
+            y, st = mb.mamba_decode(layer_p["mamba"], h, layer_cache, cfg)
+            return cm.constrain(x + y, "batch", None), st
+
+        x, st = jax.lax.scan(scan_fn, x, (sub, sub_cache), unroll=cfg.scan_unroll)
+        new_h.append(st["h"])
+        new_conv.append(st["conv"])
+        inp = jnp.concatenate([x, x0], axis=-1)
+        h = cm.rms_norm(inp, params["shared"]["attn_norm"]["scale"])
+        site_cache = {"k": cache["attn"]["k"][g], "v": cache["attn"]["v"][g]}
+        a_out, kv = cm.attention_decode(params["shared"]["attn"], h, site_cache, cfg, pos)
+        x = x + a_out
+        h = cm.rms_norm(x, params["shared"]["mlp_norm"]["scale"])
+        x = x + cm.mlp(params["shared"]["mlp"], h)
+        new_k.append(kv["k"])
+        new_v.append(kv["v"])
+    x = cm.rms_norm(x, params["final_norm"]["scale"])
+    logits = cm.lm_logits(params, x, cfg)
+    cache = {
+        "ssm": {"h": jnp.concatenate(new_h, 0), "conv": jnp.concatenate(new_conv, 0)},
+        "attn": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)},
+    }
+    return logits, cache

@@ -1,0 +1,55 @@
+"""Gradient compression for cheaper cross-pod all-reduces.
+
+* ``bf16``    — cast gradients to bf16 before the all-reduce (2x wire bytes).
+* ``int8_ef`` — per-tensor-scaled int8 quantization with error feedback: the
+  quantization residual is carried to the next step, so the compressed
+  estimator stays unbiased over time (standard EF-SGD construction).
+
+On the production mesh the quantize happens before the gradient psum (GSPMD
+all-reduces the quantized values); numerically everything here is expressed
+as quantize -> dequantize so the same code is exact on one host.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"  # none | bf16 | int8_ef
+
+
+def _quant_int8(g: jnp.ndarray) -> jnp.ndarray:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    return q * scale
+
+
+def compress_grads(
+    grads: Any, ef_state: Optional[Any], cfg: CompressionConfig
+) -> Tuple[Any, Optional[Any]]:
+    if cfg.kind == "none":
+        return grads, ef_state
+    if cfg.kind == "bf16":
+        return jax.tree.map(
+            lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads
+        ), ef_state
+    if cfg.kind == "int8_ef":
+        assert ef_state is not None, "int8_ef needs an error-feedback state"
+
+        def one(g, e):
+            target = g.astype(jnp.float32) + e
+            q = _quant_int8(target)
+            return q, target - q
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(ef_state)
+        out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+        return treedef.unflatten([o[0] for o in out]), treedef.unflatten(
+            [o[1] for o in out]
+        )
+    raise ValueError(cfg.kind)

@@ -1,0 +1,104 @@
+"""Beyond-paper integration: VDTuner's MOBO applied to THIS framework's own
+training/serving stack.
+
+The mapping mirrors the VDMS problem exactly:
+* "index type"      -> remat strategy (categorical; each strategy changes the
+                       compute/memory trade-off the way an ANNS index changes
+                       the speed/recall trade-off — and the tunable-set can
+                       differ per strategy, the paper's non-fixed-space case),
+* index parameters  -> flash-attention block sizes (bq, bk),
+* system parameters -> sequence-parallel residuals (on/off), microbatching,
+* objectives        -> (estimated step throughput, per-device memory headroom)
+                       derived from the COMPILED dry-run artifact: an
+                       expensive, black-box, conflicting pair — precisely
+                       MOBO's regime.
+
+Each evaluation is a real XLA compile + roofline extraction, taking seconds
+to minutes — the same cost profile as the paper's index-rebuild evaluations.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+
+from ..configs.base import SHAPES, ArchConfig
+from ..core.space import Param, SearchSpace
+from ..core.tuner import TuningFailure
+from ..distributed.sharding import ShardingRules
+from ..kernels import flash_xla
+from ..launch import hlo_analysis
+from ..launch.dryrun import _compile_step, _costs_of, model_flops_for
+
+HBM_PER_DEV = 16 * 2**30  # v5e
+
+
+def make_serving_space() -> SearchSpace:
+    return SearchSpace(
+        index_types={
+            "remat_nothing": [],
+            "remat_dots": [],
+            "remat_dots_no_batch": [],
+        },
+        system_params=[
+            Param("flash_bq", "grid", choices=(128, 256, 512, 1024), default=512),
+            Param("flash_bk", "grid", choices=(256, 512, 1024, 2048), default=1024),
+            Param("seq_parallel", "cat", choices=(False, True), default=True),
+        ],
+    )
+
+
+_REMAT = {
+    "remat_nothing": "nothing",
+    "remat_dots": "dots",
+    "remat_dots_no_batch": "dots_no_batch",
+}
+
+
+class ServeTuningEnv:
+    """config -> {'speed': est. steps/s at the roofline, 'recall': memory
+    headroom fraction} for one (arch, shape, mesh)."""
+
+    def __init__(self, cfg: ArchConfig, shape_name: str, mesh):
+        self.cfg = cfg
+        self.shape = SHAPES[shape_name]
+        self.mesh = mesh
+        self.cache: Dict = {}
+
+    def __call__(self, config) -> Dict[str, float]:
+        key = tuple(sorted((k, str(v)) for k, v in config.items()))
+        if key in self.cache:
+            return dict(self.cache[key])
+        remat = _REMAT[config["index_type"]]
+        flash_xla.set_default_blocks(config["flash_bq"], config["flash_bk"])
+        try:
+            rules = ShardingRules(self.mesh, seq_parallel=bool(config["seq_parallel"]))
+            _, compiled = _compile_step(self.cfg, self.shape, self.mesh, rules, remat)
+            costs = _costs_of(compiled)
+            chips = self.mesh.devices.size
+            roof = hlo_analysis.Roofline(
+                arch=self.cfg.name, shape=self.shape.name, mesh="tune", chips=chips,
+                hlo_flops=costs["flops"] * chips, hlo_bytes=costs["bytes"] * chips,
+                coll_bytes=float(sum(costs["coll_bytes"].values())) * chips,
+                coll_breakdown={}, coll_counts={},
+                model_flops=model_flops_for(self.cfg, self.shape),
+                peak_mem_per_dev=float(compiled.memory_analysis().temp_size_in_bytes),
+            )
+            step_s = max(roof.compute_s, roof.memory_s, roof.collective_s)
+            headroom = 1.0 - roof.peak_mem_per_dev / HBM_PER_DEV
+            if headroom <= 0:
+                raise TuningFailure("exceeds HBM")
+            result = {
+                "speed": 1.0 / max(step_s, 1e-12),
+                "recall": headroom,
+                "mem_gib": roof.peak_mem_per_dev / 2**30,
+            }
+        except TuningFailure:
+            raise
+        except Exception as e:  # compile failure = crashed configuration
+            raise TuningFailure(str(e)) from e
+        finally:
+            flash_xla.set_default_blocks(512, 1024)
+        self.cache[key] = dict(result)
+        return result

@@ -1,0 +1,547 @@
+"""ANNS index implementations (Milvus Table I): FLAT, IVF_FLAT, IVF_SQ8,
+IVF_PQ, HNSW, SCANN, AUTOINDEX — all with jittable search paths.
+
+Conventions
+-----------
+* Angular metric: all vectors L2-normalized, similarity = inner product
+  (higher is better); returned "sims" follow that convention.
+* Sealed segments are stacked into (n_seg, S, d); each segment has its own
+  index; searches run per segment via ``lax.map`` and the engine merges.
+* Every search returns (global_ids (Q, n_seg * k_seg), sims) with -1/-inf on
+  padded slots.
+* Build runs on host (numpy + jitted JAX pieces) and is timed by the engine —
+  index build cost is part of the tuning cost the paper measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .kmeans import kmeans, kmeans_l2
+
+INDEX_TYPES = ("FLAT", "IVF_FLAT", "IVF_SQ8", "IVF_PQ", "HNSW", "SCANN", "AUTOINDEX")
+
+
+@dataclasses.dataclass
+class IndexBundle:
+    kind: str
+    arrays: Dict[str, jnp.ndarray]  # stacked over segments (leading dim n_seg)
+    static: Dict[str, Any]  # static search params (k_seg etc. added by engine)
+
+    def memory_bytes(self) -> int:
+        return int(sum(np.prod(a.shape) * a.dtype.itemsize for a in self.arrays.values()))
+
+
+# =========================================================================
+# helpers
+# =========================================================================
+def _storage(x: np.ndarray, bf16: bool) -> jnp.ndarray:
+    return jnp.asarray(x, dtype=jnp.bfloat16 if bf16 else jnp.float32)
+
+
+def _member_lists(assign: np.ndarray, nlist: int, cap: int) -> np.ndarray:
+    """(nlist, cap) local-id lists, -1 padded; overflow beyond cap is dropped
+    (mirrors real systems' bounded per-cluster scan)."""
+    out = -np.ones((nlist, cap), dtype=np.int32)
+    order = np.argsort(assign, kind="stable")
+    sa = assign[order]
+    starts = np.searchsorted(sa, np.arange(nlist), "left")
+    ends = np.searchsorted(sa, np.arange(nlist), "right")
+    for j in range(nlist):
+        mem = order[starts[j] : ends[j]][:cap]
+        out[j, : len(mem)] = mem
+    return out
+
+
+def _ivf_cap(seg_size: int, nlist: int, nprobe: int) -> int:
+    cap = int(2.5 * seg_size / nlist) + 8
+    if nprobe * cap > seg_size + 8 * nprobe:
+        cap = max(8, seg_size // max(nprobe, 1) + 8)
+    return cap
+
+
+def _mask_pad(sims: jnp.ndarray, gids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(gids >= 0, sims, -jnp.inf)
+
+
+# =========================================================================
+# FLAT — exhaustive
+# =========================================================================
+def build_flat(key, segs: np.ndarray, gids: np.ndarray, params, sys) -> IndexBundle:
+    return IndexBundle(
+        kind="FLAT",
+        arrays={"data": _storage(segs, sys["storage_bf16"]), "gids": jnp.asarray(gids)},
+        static={},
+    )
+
+
+def _search_flat(q: jnp.ndarray, arrays, *, k_seg: int):
+    def per_seg(seg):
+        data, gids = seg
+        sims = ops.batched_ip(q, data)  # (B, S)
+        sims = _mask_pad(sims, gids[None, :])
+        top_s, top_i = jax.lax.top_k(sims, k_seg)
+        return gids[top_i], top_s
+
+    ids, sims = jax.lax.map(per_seg, (arrays["data"], arrays["gids"]))
+    return ids, sims  # (n_seg, B, k_seg)
+
+
+# =========================================================================
+# IVF family
+# =========================================================================
+def _build_ivf_common(key, segs, gids, nlist, kmeans_iters):
+    n_seg, s, d = segs.shape
+    nlist = int(min(max(nlist, 4), max(s // 8, 4)))
+    keys = jax.random.split(key, n_seg)
+    cents, assigns = jax.vmap(lambda k, x: kmeans(k, x, nlist, kmeans_iters))(
+        keys, jnp.asarray(segs)
+    )
+    return nlist, np.asarray(cents), np.asarray(assigns)
+
+
+def build_ivf_flat(key, segs, gids, params, sys) -> IndexBundle:
+    nlist, cents, assigns = _build_ivf_common(
+        key, segs, gids, params["nlist"], sys["kmeans_iters"]
+    )
+    nprobe = int(min(params["nprobe"], nlist))
+    cap = _ivf_cap(segs.shape[1], nlist, nprobe)
+    members = np.stack([_member_lists(assigns[z], nlist, cap) for z in range(len(segs))])
+    return IndexBundle(
+        kind="IVF_FLAT",
+        arrays={
+            "data": _storage(segs, sys["storage_bf16"]),
+            "gids": jnp.asarray(gids),
+            "centroids": jnp.asarray(cents),
+            "members": jnp.asarray(members),
+        },
+        static={"nprobe": nprobe},
+    )
+
+
+def _gather_candidates(q, centroids, members, *, nprobe):
+    """Probe top-nprobe clusters; return flattened candidate local ids (B, P)."""
+    csim = jnp.dot(q, centroids.T, preferred_element_type=jnp.float32)  # (B, nlist)
+    _, probe = jax.lax.top_k(csim, nprobe)  # (B, nprobe)
+    cand = members[probe]  # (B, nprobe, cap)
+    return cand.reshape(q.shape[0], -1)  # (B, P)
+
+
+def _search_ivf_flat(q, arrays, *, k_seg: int, nprobe: int):
+    def per_seg(seg):
+        data, gids, cents, members = seg
+        cand = _gather_candidates(q, cents, members, nprobe=nprobe)  # (B, P)
+        safe = jnp.maximum(cand, 0)
+        vecs = data[safe]  # (B, P, d)
+        sims = jnp.einsum("bpd,bd->bp", vecs.astype(jnp.float32), q)
+        sims = jnp.where(cand >= 0, sims, -jnp.inf)
+        k = min(k_seg, sims.shape[1])
+        top_s, top_i = jax.lax.top_k(sims, k)
+        lids = jnp.take_along_axis(cand, top_i, axis=1)
+        ids = jnp.where(lids >= 0, gids[jnp.maximum(lids, 0)], -1)
+        top_s = jnp.where(ids >= 0, top_s, -jnp.inf)
+        if k < k_seg:  # pad to fixed k_seg
+            pad = k_seg - k
+            ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+            top_s = jnp.pad(top_s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        return ids, top_s
+
+    return jax.lax.map(
+        per_seg,
+        (arrays["data"], arrays["gids"], arrays["centroids"], arrays["members"]),
+    )
+
+
+def build_ivf_sq8(key, segs, gids, params, sys) -> IndexBundle:
+    nlist, cents, assigns = _build_ivf_common(
+        key, segs, gids, params["nlist"], sys["kmeans_iters"]
+    )
+    nprobe = int(min(params["nprobe"], nlist))
+    cap = _ivf_cap(segs.shape[1], nlist, nprobe)
+    members = np.stack([_member_lists(assigns[z], nlist, cap) for z in range(len(segs))])
+    scale = np.abs(segs).max(axis=(0, 1)) / 127.0 + 1e-12  # (d,) shared scale
+    codes = np.clip(np.round(segs / scale), -127, 127).astype(np.int8)
+    return IndexBundle(
+        kind="IVF_SQ8",
+        arrays={
+            "codes": jnp.asarray(codes),
+            "scale": jnp.asarray(scale.astype(np.float32)),
+            "gids": jnp.asarray(gids),
+            "centroids": jnp.asarray(cents),
+            "members": jnp.asarray(members),
+        },
+        static={"nprobe": nprobe},
+    )
+
+
+def _search_ivf_sq8(q, arrays, *, k_seg: int, nprobe: int):
+    scale = arrays["scale"]
+
+    def per_seg(seg):
+        codes, gids, cents, members = seg
+        cand = _gather_candidates(q, cents, members, nprobe=nprobe)
+        safe = jnp.maximum(cand, 0)
+        vecs = codes[safe].astype(jnp.float32) * scale[None, None, :]
+        sims = jnp.einsum("bpd,bd->bp", vecs, q)
+        sims = jnp.where(cand >= 0, sims, -jnp.inf)
+        k = min(k_seg, sims.shape[1])
+        top_s, top_i = jax.lax.top_k(sims, k)
+        lids = jnp.take_along_axis(cand, top_i, axis=1)
+        ids = jnp.where(lids >= 0, gids[jnp.maximum(lids, 0)], -1)
+        top_s = jnp.where(ids >= 0, top_s, -jnp.inf)
+        if k < k_seg:
+            pad = k_seg - k
+            ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+            top_s = jnp.pad(top_s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        return ids, top_s
+
+    return jax.lax.map(
+        per_seg,
+        (arrays["codes"], arrays["gids"], arrays["centroids"], arrays["members"]),
+    )
+
+
+def build_ivf_pq(key, segs, gids, params, sys) -> IndexBundle:
+    n_seg, s, d = segs.shape
+    m = int(params["m"])
+    while d % m != 0:  # snap to a divisor of d
+        m -= 1
+    nbits = int(params["nbits"])
+    c = 2**nbits
+    nlist, cents, assigns = _build_ivf_common(
+        key, segs, gids, params["nlist"], sys["kmeans_iters"]
+    )
+    nprobe = int(min(params["nprobe"], nlist))
+    cap = _ivf_cap(s, nlist, nprobe)
+    members = np.stack([_member_lists(assigns[z], nlist, cap) for z in range(n_seg)])
+    dsub = d // m
+    # shared codebooks across segments (trained on the pooled sample)
+    pool = segs.reshape(-1, m, dsub)
+    sample = pool[:: max(1, pool.shape[0] // 8192)]
+    keys = jax.random.split(jax.random.fold_in(key, 7), m)
+    cb, _ = jax.vmap(
+        lambda kk, xs: kmeans_l2(kk, xs, c, sys["kmeans_iters"])
+    )(keys, jnp.asarray(sample.transpose(1, 0, 2)))  # (m, c, dsub)
+    cb = np.asarray(cb)
+    # encode: nearest codeword per subspace
+    codes = np.empty((n_seg, s, m), dtype=np.uint8)
+    x = segs.reshape(n_seg * s, m, dsub)
+    for j in range(m):
+        d2 = (
+            np.sum(x[:, j] ** 2, 1)[:, None]
+            - 2.0 * x[:, j] @ cb[j].T
+            + np.sum(cb[j] ** 2, 1)[None, :]
+        )
+        codes[..., j] = np.argmin(d2, axis=1).astype(np.uint8).reshape(n_seg, s)
+    return IndexBundle(
+        kind="IVF_PQ",
+        arrays={
+            "codes": jnp.asarray(codes),
+            "codebooks": jnp.asarray(cb.astype(np.float32)),
+            "gids": jnp.asarray(gids),
+            "centroids": jnp.asarray(cents),
+            "members": jnp.asarray(members),
+        },
+        static={"nprobe": nprobe, "m": m, "c": c},
+    )
+
+
+def _search_ivf_pq(q, arrays, *, k_seg: int, nprobe: int, m: int, c: int):
+    b, d = q.shape
+    dsub = d // m
+    qs = q.reshape(b, m, dsub)
+    # similarity LUT: higher is better (IP of query sub-vector with codeword)
+    lut = jnp.einsum("bmd,mcd->bmc", qs, arrays["codebooks"])  # (B, m, c)
+
+    def per_seg(seg):
+        codes, gids, cents, members = seg
+        cand = _gather_candidates(q, cents, members, nprobe=nprobe)  # (B, P)
+        safe = jnp.maximum(cand, 0)
+        ccodes = codes[safe].astype(jnp.int32)  # (B, P, m)
+        g = jnp.take_along_axis(
+            lut[:, None, :, :], ccodes[..., None], axis=3
+        )  # (B, P, m, 1)
+        sims = jnp.sum(g[..., 0], axis=-1)
+        sims = jnp.where(cand >= 0, sims, -jnp.inf)
+        k = min(k_seg, sims.shape[1])
+        top_s, top_i = jax.lax.top_k(sims, k)
+        lids = jnp.take_along_axis(cand, top_i, axis=1)
+        ids = jnp.where(lids >= 0, gids[jnp.maximum(lids, 0)], -1)
+        top_s = jnp.where(ids >= 0, top_s, -jnp.inf)
+        if k < k_seg:
+            pad = k_seg - k
+            ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+            top_s = jnp.pad(top_s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        return ids, top_s
+
+    return jax.lax.map(
+        per_seg, (arrays["codes"], arrays["gids"], arrays["centroids"], arrays["members"])
+    )
+
+
+# =========================================================================
+# HNSW (NSW-style kNN graph + diversity pruning + shortcut links)
+# =========================================================================
+@partial(jax.jit, static_argnames=("m_links", "ef_construction", "row_chunk"))
+def _build_graph(data: jnp.ndarray, m_links: int, ef_construction: int, row_chunk: int = 512):
+    """Graph build: exact kNN candidates (chunked) + HNSW diversity heuristic."""
+    s, d = data.shape
+    efc = min(ef_construction, s - 1)
+
+    def knn_rows(rows):
+        sims = jnp.dot(data[rows], data.T, preferred_element_type=jnp.float32)
+        sims = sims.at[jnp.arange(rows.shape[0]), rows].set(-jnp.inf)  # no self
+        top_s, top_i = jax.lax.top_k(sims, efc)
+        return top_i, top_s
+
+    n_chunks = (s + row_chunk - 1) // row_chunk
+    pad_s = n_chunks * row_chunk
+    rows = jnp.arange(pad_s) % s
+    cand_i, cand_s = jax.lax.map(
+        knn_rows, rows.reshape(n_chunks, row_chunk)
+    )
+    cand_i = cand_i.reshape(pad_s, efc)[:s]
+    cand_s = cand_s.reshape(pad_s, efc)[:s]
+
+    # diversity pruning (per-node, vectorized over node chunks):
+    # iteratively select the best remaining candidate; discard candidates that
+    # are closer to the selected neighbor than to the node itself.
+    def prune_chunk(args):
+        ci, cs, rows = args  # (C, efc), (C, efc), (C,)
+        alive = jnp.isfinite(cs)
+
+        def step(carry, t):
+            alive, sel = carry
+            score = jnp.where(alive, cs, -jnp.inf)
+            j = jnp.argmax(score, axis=1)  # (C,)
+            ok = jnp.take_along_axis(alive, j[:, None], 1)[:, 0]
+            pick = jnp.take_along_axis(ci, j[:, None], 1)[:, 0]  # (C,)
+            pick = jnp.where(ok, pick, rows)  # degenerate: self-link
+            sel = sel.at[:, t].set(pick)
+            # drop candidates nearer to `pick` than to the node
+            pv = data[pick]  # (C, d)
+            cv = data[ci]  # (C, efc, d)
+            sim_to_pick = jnp.einsum("ced,cd->ce", cv, pv)
+            alive = alive & (sim_to_pick <= cs) & (
+                jnp.arange(efc)[None, :] != j[:, None]
+            )
+            return (alive, sel), None
+
+        sel0 = jnp.broadcast_to(rows[:, None], (rows.shape[0], m_links)).astype(jnp.int32)
+        (alive, sel), _ = jax.lax.scan(step, (alive, sel0), jnp.arange(m_links))
+        return sel
+
+    sel = jax.lax.map(
+        prune_chunk,
+        (
+            cand_i.reshape(n_chunks, row_chunk, efc)
+            if s == pad_s
+            else jnp.pad(cand_i, ((0, pad_s - s), (0, 0))).reshape(n_chunks, row_chunk, efc),
+            jnp.pad(cand_s, ((0, pad_s - s), (0, 0)), constant_values=-jnp.inf).reshape(
+                n_chunks, row_chunk, efc
+            )
+            if s != pad_s
+            else cand_s.reshape(n_chunks, row_chunk, efc),
+            rows.reshape(n_chunks, row_chunk),
+        ),
+    )
+    graph = sel.reshape(pad_s, m_links)[:s]
+    # small-world shortcut links in the last columns (keeps the graph connected)
+    n_rand = max(1, m_links // 8)
+    key = jax.random.PRNGKey(s * 7 + m_links)
+    shortcuts = jax.random.randint(key, (s, n_rand), 0, s, dtype=jnp.int32)
+    graph = graph.at[:, -n_rand:].set(shortcuts)
+    return graph
+
+
+def build_hnsw(key, segs, gids, params, sys) -> IndexBundle:
+    n_seg, s, d = segs.shape
+    m_links = int(max(4, min(params["M"], 64)))
+    efc = int(min(max(params["efConstruction"], 16), s - 1))
+    graphs = jnp.stack(
+        [_build_graph(jnp.asarray(segs[z]), m_links, efc) for z in range(n_seg)]
+    )
+    ef = int(min(max(params["ef"], 8), s))
+    return IndexBundle(
+        kind="HNSW",
+        arrays={
+            "data": _storage(segs, sys["storage_bf16"]),
+            "gids": jnp.asarray(gids),
+            "graph": graphs,
+        },
+        static={"ef": ef, "m_links": m_links},
+    )
+
+
+def _search_hnsw(q, arrays, *, k_seg: int, ef: int, m_links: int):
+    b, d = q.shape
+
+    def per_seg(seg):
+        data, gids, graph = seg
+        s = data.shape[0]
+        dataf = data.astype(jnp.float32)
+        # entry points: strided samples across the segment
+        n_entry = min(4, ef)
+        entries = (jnp.arange(n_entry) * (s // max(n_entry, 1))).astype(jnp.int32)
+        beam_ids = jnp.broadcast_to(entries, (b, n_entry))
+        beam_sims = jnp.einsum("bed,bd->be", dataf[beam_ids], q)
+        pad = ef - n_entry
+        beam_ids = jnp.pad(beam_ids, ((0, 0), (0, pad)), constant_values=0)
+        beam_sims = jnp.pad(beam_sims, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        expanded = jnp.zeros((b, ef), dtype=bool)
+        visited = jnp.zeros((b, s), dtype=bool)
+        visited = visited.at[jnp.arange(b)[:, None], beam_ids].set(True)
+
+        def step(carry, _):
+            beam_ids, beam_sims, expanded, visited = carry
+            score = jnp.where(expanded | ~jnp.isfinite(beam_sims), -jnp.inf, beam_sims)
+            j = jnp.argmax(score, axis=1)  # (b,)
+            has = jnp.isfinite(jnp.take_along_axis(score, j[:, None], 1)[:, 0])
+            expanded = expanded.at[jnp.arange(b), j].set(True)
+            node = jnp.take_along_axis(beam_ids, j[:, None], 1)[:, 0]  # (b,)
+            nbrs = graph[node]  # (b, M)
+            seen = jnp.take_along_axis(visited, nbrs, axis=1)  # (b, M)
+            visited = visited.at[jnp.arange(b)[:, None], nbrs].set(True)
+            nsims = jnp.einsum("bmd,bd->bm", dataf[nbrs], q)
+            nsims = jnp.where(seen | ~has[:, None], -jnp.inf, nsims)
+            all_ids = jnp.concatenate([beam_ids, nbrs], axis=1)
+            all_sims = jnp.concatenate([beam_sims, nsims], axis=1)
+            all_exp = jnp.concatenate([expanded, jnp.zeros_like(seen)], axis=1)
+            top_s, top_i = jax.lax.top_k(all_sims, ef)
+            beam_ids = jnp.take_along_axis(all_ids, top_i, axis=1)
+            expanded = jnp.take_along_axis(all_exp, top_i, axis=1)
+            return (beam_ids, top_s, expanded, visited), None
+
+        (beam_ids, beam_sims, _, _), _ = jax.lax.scan(
+            step, (beam_ids, beam_sims, expanded, visited), None, length=ef
+        )
+        k = min(k_seg, ef)
+        top_s, top_i = jax.lax.top_k(beam_sims, k)
+        lids = jnp.take_along_axis(beam_ids, top_i, axis=1)
+        ids = jnp.where(jnp.isfinite(top_s), gids[lids], -1)
+        top_s = jnp.where(ids >= 0, top_s, -jnp.inf)
+        if k < k_seg:
+            padk = k_seg - k
+            ids = jnp.pad(ids, ((0, 0), (0, padk)), constant_values=-1)
+            top_s = jnp.pad(top_s, ((0, 0), (0, padk)), constant_values=-jnp.inf)
+        return ids, top_s
+
+    return jax.lax.map(per_seg, (arrays["data"], arrays["gids"], arrays["graph"]))
+
+
+# =========================================================================
+# SCANN — IVF + int8 score-aware quantized scan + exact re-ranking
+# =========================================================================
+def build_scann(key, segs, gids, params, sys) -> IndexBundle:
+    nlist, cents, assigns = _build_ivf_common(
+        key, segs, gids, params["nlist"], sys["kmeans_iters"]
+    )
+    nprobe = int(min(params["nprobe"], nlist))
+    cap = _ivf_cap(segs.shape[1], nlist, nprobe)
+    members = np.stack([_member_lists(assigns[z], nlist, cap) for z in range(len(segs))])
+    scale = np.abs(segs).max(axis=(0, 1)) / 127.0 + 1e-12
+    codes = np.clip(np.round(segs / scale), -127, 127).astype(np.int8)
+    reorder_k = int(max(params["reorder_k"], 1))
+    return IndexBundle(
+        kind="SCANN",
+        arrays={
+            "codes": jnp.asarray(codes),
+            "scale": jnp.asarray(scale.astype(np.float32)),
+            "data": _storage(segs, sys["storage_bf16"]),
+            "gids": jnp.asarray(gids),
+            "centroids": jnp.asarray(cents),
+            "members": jnp.asarray(members),
+        },
+        static={"nprobe": nprobe, "reorder_k": reorder_k},
+    )
+
+
+def _search_scann(q, arrays, *, k_seg: int, nprobe: int, reorder_k: int):
+    scale = arrays["scale"]
+
+    def per_seg(seg):
+        codes, data, gids, cents, members = seg
+        cand = _gather_candidates(q, cents, members, nprobe=nprobe)
+        safe = jnp.maximum(cand, 0)
+        approx = jnp.einsum(
+            "bpd,bd->bp", codes[safe].astype(jnp.float32) * scale[None, None, :], q
+        )
+        approx = jnp.where(cand >= 0, approx, -jnp.inf)
+        r = min(reorder_k, approx.shape[1])
+        _, top_r = jax.lax.top_k(approx, r)  # (B, r)
+        rcand = jnp.take_along_axis(cand, top_r, axis=1)
+        rsafe = jnp.maximum(rcand, 0)
+        exact = jnp.einsum("brd,bd->br", data[rsafe].astype(jnp.float32), q)
+        exact = jnp.where(rcand >= 0, exact, -jnp.inf)
+        k = min(k_seg, exact.shape[1])
+        top_s, top_i = jax.lax.top_k(exact, k)
+        lids = jnp.take_along_axis(rcand, top_i, axis=1)
+        ids = jnp.where(lids >= 0, gids[jnp.maximum(lids, 0)], -1)
+        top_s = jnp.where(ids >= 0, top_s, -jnp.inf)
+        if k < k_seg:
+            pad = k_seg - k
+            ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+            top_s = jnp.pad(top_s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        return ids, top_s
+
+    return jax.lax.map(
+        per_seg,
+        (
+            arrays["codes"],
+            arrays["data"],
+            arrays["gids"],
+            arrays["centroids"],
+            arrays["members"],
+        ),
+    )
+
+
+# =========================================================================
+# registry
+# =========================================================================
+def build_index(key, segs, gids, index_type: str, params: Dict, sys: Dict) -> IndexBundle:
+    if index_type == "FLAT":
+        return build_flat(key, segs, gids, params, sys)
+    if index_type == "IVF_FLAT":
+        return build_ivf_flat(key, segs, gids, params, sys)
+    if index_type == "IVF_SQ8":
+        return build_ivf_sq8(key, segs, gids, params, sys)
+    if index_type == "IVF_PQ":
+        return build_ivf_pq(key, segs, gids, params, sys)
+    if index_type == "HNSW":
+        return build_hnsw(key, segs, gids, params, sys)
+    if index_type == "SCANN":
+        return build_scann(key, segs, gids, params, sys)
+    if index_type == "AUTOINDEX":
+        s = segs.shape[1]
+        auto = {"nlist": max(4, int(np.sqrt(s) * 2)), "nprobe": 16}
+        return build_ivf_flat(key, segs, gids, auto, sys)
+    raise ValueError(index_type)
+
+
+def search_index(bundle: IndexBundle, q: jnp.ndarray, k_seg: int):
+    """Returns (ids, sims) of shape (n_seg, B, k_seg) — merged by the engine."""
+    kind, st = bundle.kind, bundle.static
+    if kind == "FLAT":
+        return _search_flat(q, bundle.arrays, k_seg=k_seg)
+    if kind in ("IVF_FLAT", "AUTOINDEX"):
+        return _search_ivf_flat(q, bundle.arrays, k_seg=k_seg, nprobe=st["nprobe"])
+    if kind == "IVF_SQ8":
+        return _search_ivf_sq8(q, bundle.arrays, k_seg=k_seg, nprobe=st["nprobe"])
+    if kind == "IVF_PQ":
+        return _search_ivf_pq(
+            q, bundle.arrays, k_seg=k_seg, nprobe=st["nprobe"], m=st["m"], c=st["c"]
+        )
+    if kind == "HNSW":
+        return _search_hnsw(q, bundle.arrays, k_seg=k_seg, ef=st["ef"], m_links=st["m_links"])
+    if kind == "SCANN":
+        return _search_scann(
+            q, bundle.arrays, k_seg=k_seg, nprobe=st["nprobe"], reorder_k=st["reorder_k"]
+        )
+    raise ValueError(kind)

@@ -1,0 +1,64 @@
+"""Jittable spherical k-means (Lloyd) used by the IVF-family indexes.
+
+Centroids are re-normalized every iteration (angular metric). Empty clusters
+keep their previous centroid. Shapes are static so repeated builds with
+grid-quantized (k, iters) hit the jit cache.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(key: jax.Array, x: jnp.ndarray, k: int, iters: int):
+    """x: (n, d) normalized. Returns (centroids (k, d), assign (n,))."""
+    n, d = x.shape
+    init_idx = jax.random.choice(key, n, shape=(k,), replace=False)
+    cent = x[init_idx]
+
+    def body(cent, _):
+        sim = x @ cent.T  # (n, k)
+        assign = jnp.argmax(sim, axis=1)
+        one_hot = jax.nn.one_hot(assign, k, dtype=x.dtype)  # (n, k)
+        sums = one_hot.T @ x  # (k, d)
+        counts = one_hot.sum(axis=0)[:, None]  # (k, 1)
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), cent)
+        new = new / (jnp.linalg.norm(new, axis=1, keepdims=True) + 1e-12)
+        return new, None
+
+    cent, _ = jax.lax.scan(body, cent, None, length=iters)
+    assign = jnp.argmax(x @ cent.T, axis=1)
+    return cent, assign
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans_l2(key: jax.Array, x: jnp.ndarray, k: int, iters: int):
+    """Plain (non-spherical) Lloyd for PQ sub-codebooks."""
+    n, d = x.shape
+    init_idx = jax.random.choice(key, n, shape=(k,), replace=False)
+    cent = x[init_idx]
+
+    def body(cent, _):
+        d2 = (
+            jnp.sum(x * x, 1)[:, None]
+            - 2.0 * x @ cent.T
+            + jnp.sum(cent * cent, 1)[None, :]
+        )
+        assign = jnp.argmin(d2, axis=1)
+        one_hot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+        sums = one_hot.T @ x
+        counts = one_hot.sum(axis=0)[:, None]
+        new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1.0), cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(body, cent, None, length=iters)
+    d2 = (
+        jnp.sum(x * x, 1)[:, None]
+        - 2.0 * x @ cent.T
+        + jnp.sum(cent * cent, 1)[None, :]
+    )
+    assign = jnp.argmin(d2, axis=1)
+    return cent, assign

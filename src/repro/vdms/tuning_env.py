@@ -1,0 +1,123 @@
+"""The VDMS tuning environment: the Milvus-like 16-dimensional search space
+(index type + 8 index parameters + 7 system parameters, paper §V-A) and the
+expensive black-box objective the tuners optimize.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+from ..core.space import Param, SearchSpace
+from ..core.tuner import TuningFailure
+from .datasets import VectorDataset
+from .engine import VDMSInstance
+
+# ---------------------------------------------------------------------------
+# Search space (16 dims: 1 index type + 8 index params + 7 system params)
+# ---------------------------------------------------------------------------
+_NLIST = (16, 32, 64, 128, 256, 512)
+_NPROBE = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def make_space() -> SearchSpace:
+    index_types = {
+        "FLAT": [],
+        "IVF_FLAT": [
+            Param("nlist", "grid", choices=_NLIST, default=128),
+            Param("nprobe", "grid", choices=_NPROBE, default=8),
+        ],
+        "IVF_SQ8": [
+            Param("nlist", "grid", choices=_NLIST, default=128),
+            Param("nprobe", "grid", choices=_NPROBE, default=8),
+        ],
+        "IVF_PQ": [
+            Param("nlist", "grid", choices=_NLIST, default=128),
+            Param("m", "grid", choices=(4, 8, 16, 32), default=8),
+            Param("nbits", "grid", choices=(4, 6, 8), default=8),
+            Param("nprobe", "grid", choices=_NPROBE, default=8),
+        ],
+        "HNSW": [
+            Param("M", "grid", choices=(8, 16, 32, 48), default=16),
+            Param("efConstruction", "grid", choices=(32, 64, 128, 256), default=128),
+            Param("ef", "grid", choices=(16, 32, 64, 128, 256), default=64),
+        ],
+        "SCANN": [
+            Param("nlist", "grid", choices=_NLIST, default=128),
+            Param("nprobe", "grid", choices=_NPROBE, default=8),
+            Param("reorder_k", "grid", choices=(32, 64, 128, 256, 512), default=64),
+        ],
+        "AUTOINDEX": [],
+    }
+    system = [
+        Param("segment_max_size", "grid", choices=(1024, 2048, 4096, 8192), default=4096),
+        Param("seal_proportion", "float", 0.1, 1.0, default=0.75),
+        Param("graceful_time", "float", 0.0, 0.9, default=0.2),
+        Param("search_batch_size", "grid", choices=(8, 16, 32, 64, 128), default=32),
+        Param("topk_merge_width", "grid", choices=(16, 32, 64, 128), default=64),
+        Param("kmeans_iters", "grid", choices=(4, 8, 16, 25), default=8),
+        Param("storage_bf16", "cat", choices=(False, True), default=False),
+    ]
+    return SearchSpace(index_types=index_types, system_params=system)
+
+
+# ---------------------------------------------------------------------------
+# Objective
+# ---------------------------------------------------------------------------
+class VDMSTuningEnv:
+    """Callable black-box: config -> {'speed', 'recall', 'mem_gib', ...}.
+
+    ``mode="wall"`` measures real QPS; ``mode="analytic"`` uses the engine's
+    deterministic cost model (recall is always real). Results are cached by
+    canonical config so repeated samples are free (and the replay-time ledger
+    still reflects first-evaluation cost, like a real tuning session).
+    """
+
+    def __init__(
+        self,
+        dataset: VectorDataset,
+        mode: str = "wall",
+        seed: int = 0,
+        build_timeout: float = 120.0,
+        repeats: int = 3,
+    ):
+        self.dataset = dataset
+        self.mode = mode
+        self.seed = seed
+        self.build_timeout = build_timeout
+        self.repeats = repeats
+        self.cache: Dict[Tuple, Dict[str, float]] = {}
+        self.n_evals = 0
+        self.total_replay_time = 0.0
+
+    @staticmethod
+    def _canon(cfg: Dict[str, Any]) -> Tuple:
+        items = []
+        for k in sorted(cfg):
+            v = cfg[k]
+            if isinstance(v, float):
+                v = round(v, 4)
+            items.append((k, v))
+        return tuple(items)
+
+    def __call__(self, cfg: Dict[str, Any]) -> Dict[str, float]:
+        key = self._canon(cfg)
+        if key in self.cache:
+            return dict(self.cache[key])
+        t0 = time.perf_counter()
+        try:
+            inst = VDMSInstance(self.dataset, cfg, seed=self.seed)
+            if inst.build_time > self.build_timeout:
+                raise TuningFailure(f"index build exceeded {self.build_timeout}s")
+            result = inst.measure(repeats=self.repeats, mode=self.mode)
+            del inst
+        except TuningFailure:
+            raise
+        except (ValueError, ZeroDivisionError, RuntimeError) as e:
+            raise TuningFailure(str(e)) from e
+        finally:
+            self.total_replay_time += time.perf_counter() - t0
+            self.n_evals += 1
+        self.cache[key] = dict(result)
+        return result

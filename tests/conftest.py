@@ -1,0 +1,9 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    from repro.vdms import make_dataset
+
+    return make_dataset("glove_like", n=2048, n_queries=32, k=10, seed=0)

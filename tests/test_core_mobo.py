@@ -1,0 +1,296 @@
+"""Unit + property tests for the VDTuner core (GP, Pareto, HV, EHVI,
+NPI normalization, successive abandon, the full Algorithm-1 loop)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GP, Param, SearchSpace, SuccessiveAbandon, VDTuner, RandomLHS, QEHVI,
+    balanced_base, cei, ehvi_mc, ei, hv_2d, hvi_2d, max_base, non_dominated_mask,
+    npi_normalize, pareto_front, scores_by_hv_influence,
+)
+
+# ---------------------------------------------------------------------------
+# hypervolume / pareto
+# ---------------------------------------------------------------------------
+points2d = st.lists(
+    st.tuples(
+        st.floats(0.01, 100.0, allow_nan=False), st.floats(0.01, 100.0, allow_nan=False)
+    ),
+    min_size=1,
+    max_size=24,
+).map(lambda ps: np.array(ps, dtype=np.float64))
+
+
+def test_hv_known_values():
+    assert hv_2d(np.array([[3.0, 1.0], [1.0, 3.0]]), np.zeros(2)) == pytest.approx(5.0)
+    assert hv_2d(np.array([[2.0, 2.0]]), np.zeros(2)) == pytest.approx(4.0)
+    assert hv_2d(np.zeros((0, 2)), np.zeros(2)) == 0.0
+    # below-ref points contribute nothing
+    assert hv_2d(np.array([[-1.0, 5.0]]), np.zeros(2)) == 0.0
+
+
+def test_hvi_matches_hv_difference():
+    rng = np.random.default_rng(0)
+    front = pareto_front(rng.random((12, 2)) * 10)
+    pts = rng.random((40, 2)) * 12
+    ref = np.zeros(2)
+    base = hv_2d(front, ref)
+    got = hvi_2d(pts, front, ref)
+    for p, g in zip(pts, got):
+        expect = hv_2d(np.vstack([front, p[None]]), ref) - base
+        assert g == pytest.approx(expect, rel=1e-9, abs=1e-9)
+
+
+@settings(max_examples=60, deadline=None)
+@given(points2d)
+def test_hv_monotone_under_union(ps):
+    ref = np.zeros(2)
+    hv_all = hv_2d(ps, ref)
+    hv_sub = hv_2d(ps[: max(1, len(ps) // 2)], ref)
+    assert hv_all >= hv_sub - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(points2d)
+def test_dominated_point_adds_no_hv(ps):
+    ref = np.zeros(2)
+    base = hv_2d(ps, ref)
+    dominated = ps.min(axis=0) * 0.5  # dominated by every point
+    assert hv_2d(np.vstack([ps, dominated[None]]), ref) == pytest.approx(base)
+    assert hvi_2d(dominated[None], ps, ref)[0] == pytest.approx(0.0, abs=1e-12)
+
+
+@settings(max_examples=60, deadline=None)
+@given(points2d)
+def test_pareto_front_idempotent_and_non_dominated(ps):
+    f = pareto_front(ps)
+    assert len(f) >= 1
+    assert non_dominated_mask(f).all()
+    f2 = pareto_front(f)
+    assert np.array_equal(np.sort(f, axis=0), np.sort(f2, axis=0))
+
+
+# ---------------------------------------------------------------------------
+# GP
+# ---------------------------------------------------------------------------
+def test_gp_fits_smooth_function():
+    rng = np.random.default_rng(1)
+    X = rng.random((50, 2))
+    Y = np.sin(3 * X[:, 0]) + X[:, 1] ** 2
+    gp = GP(seed=0).fit(X, Y)
+    mean, std = gp.predict(X[:10])
+    assert np.abs(mean[:, 0] - Y[:10]).max() < 0.05
+    # uncertainty grows away from data
+    far = np.full((1, 2), 5.0)
+    _, std_far = gp.predict(far)
+    assert std_far[0, 0] > std.mean() * 2
+
+
+def test_gp_multi_output_independent():
+    rng = np.random.default_rng(2)
+    X = rng.random((40, 3))
+    Y = np.stack([X[:, 0] * 2, -X[:, 1]], axis=1)
+    gp = GP(seed=0).fit(X, Y)
+    mean, _ = gp.predict(X[:5])
+    assert np.abs(mean - Y[:5]).max() < 0.1
+
+
+# ---------------------------------------------------------------------------
+# acquisitions
+# ---------------------------------------------------------------------------
+def test_ei_properties():
+    # higher mean -> higher EI; zero std + mean below best -> 0
+    assert ei(np.array([2.0]), np.array([0.1]), best=1.0) > ei(
+        np.array([1.5]), np.array([0.1]), best=1.0
+    )
+    assert ei(np.array([0.5]), np.array([1e-12]), best=1.0)[0] == pytest.approx(0.0, abs=1e-9)
+
+
+def test_cei_feasibility_gates_ei():
+    # same speed posterior, one candidate's recall is clearly below the limit
+    out = cei(
+        mean_spd=np.array([2.0, 2.0]),
+        std_spd=np.array([0.1, 0.1]),
+        mean_rec=np.array([0.95, 0.5]),
+        std_rec=np.array([0.01, 0.01]),
+        best_feasible=1.0,
+        rlim=0.9,
+    )
+    assert out[0] > 100 * out[1]
+
+
+def test_ehvi_prefers_front_extension():
+    rng = np.random.default_rng(3)
+    front = np.array([[1.0, 0.2], [0.5, 0.6]])
+    ref = np.zeros(2)
+    mean = np.array([[1.2, 0.7], [0.4, 0.3]])  # first dominates the front
+    std = np.full((2, 2), 0.01)
+    acq = ehvi_mc(mean, std, front, ref, rng, n_samples=256)
+    assert acq[0] > acq[1] * 10
+
+
+# ---------------------------------------------------------------------------
+# NPI normalization + abandon scoring
+# ---------------------------------------------------------------------------
+def test_balanced_base_picks_balanced_point():
+    Y = np.array([[10.0, 0.1], [5.0, 0.5], [1.0, 1.0]])
+    base = balanced_base(Y)
+    # (5, 0.5) is the most balanced: |5/10 - 0.5/1| = 0
+    assert np.allclose(base, [5.0, 0.5])
+
+
+def test_npi_normalization_removes_scale():
+    Y = np.array([[100.0, 0.5], [200.0, 0.25], [1.0, 0.9], [2.0, 0.45]])
+    types = np.array(["fast", "fast", "slow", "slow"])
+    Yn, bases = npi_normalize(Y, types)
+    # each type's base maps to ~(1, 1): inter-type offsets removed
+    assert Yn[types == "fast"].max() <= 2.0 + 1e-9
+    assert Yn[types == "slow"].max() <= 2.0 + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.1, 100.0), st.floats(0.1, 100.0))
+def test_npi_scale_invariance(s1, s2):
+    rng = np.random.default_rng(7)
+    Y = rng.random((12, 2)) + 0.1
+    types = np.array(["a", "b"] * 6)
+    Yn1, _ = npi_normalize(Y, types)
+    Yn2, _ = npi_normalize(Y * np.array([s1, s2]), types)
+    assert np.allclose(Yn1, Yn2, rtol=1e-9)
+
+
+def test_scores_reward_contributing_type():
+    # type "good" owns the whole front; "bad" is dominated
+    Y = np.array([[10, 0.9], [8, 0.95], [1, 0.1], [2, 0.2]], dtype=float)
+    types = np.array(["good", "good", "bad", "bad"])
+    scores = scores_by_hv_influence(Y, types, ["good", "bad"])
+    assert scores["good"] > scores["bad"]
+
+
+def test_successive_abandon_windowed_trigger():
+    ab = SuccessiveAbandon(["a", "b", "c"], window=3)
+    # a and b both own part of the Pareto front; c is strictly dominated
+    Y = np.array([[10, 0.5], [6, 0.92], [1, 0.1]], dtype=float)
+    types = np.array(["a", "b", "c"])
+    dropped = []
+    for _ in range(4):
+        out = ab.step(Y, types)
+        if out:
+            dropped.append(out)
+    assert dropped == ["c"]  # consistently-worst type dropped exactly once
+    assert sorted(ab.remaining) == ["a", "b"]
+    # never drops below one type
+    ab2 = SuccessiveAbandon(["a"], window=1)
+    assert ab2.step(Y[:1], types[:1]) is None
+
+
+# ---------------------------------------------------------------------------
+# search space
+# ---------------------------------------------------------------------------
+def _toy_space():
+    return SearchSpace(
+        index_types={
+            "A": [Param("ka", "grid", choices=(1, 2, 4, 8), default=2)],
+            "B": [Param("kb", "float", 0.0, 1.0, default=0.5)],
+        },
+        system_params=[
+            Param("s1", "float", 0.0, 1.0, default=0.5),
+            Param("s2", "cat", choices=(False, True), default=False),
+        ],
+    )
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_space_encode_decode_roundtrip(seed):
+    space = _toy_space()
+    rng = np.random.default_rng(seed)
+    cfg = space.sample(rng, 1)[0]
+    x = space.encode(cfg)
+    assert x.shape == (space.dims,)
+    back = space.decode(x, index_type=cfg["index_type"])
+    for k, v in cfg.items():
+        if isinstance(v, float):
+            assert back[k] == pytest.approx(v, abs=1e-6)
+        else:
+            assert back[k] == v
+
+
+def test_space_free_mask_owns_right_dims():
+    space = _toy_space()
+    ma, mb = space.free_mask("A"), space.free_mask("B")
+    # both include the two system params; each owns exactly its index param
+    assert ma.sum() == 3 and mb.sum() == 3
+    assert not np.array_equal(ma, mb)
+
+
+def test_lhs_covers_all_types():
+    space = _toy_space()
+    cfgs = space.lhs(np.random.default_rng(0), 8)
+    assert {c["index_type"] for c in cfgs} == {"A", "B"}
+
+
+# ---------------------------------------------------------------------------
+# end-to-end tuner on a cheap synthetic objective
+# ---------------------------------------------------------------------------
+def _toy_objective(cfg):
+    t = cfg["index_type"]
+    k = cfg.get("ka", cfg.get("kb", 0.5))
+    k = k / 8.0 if t == "A" else k
+    sysq = 1.0 - (cfg["s1"] - 0.6) ** 2
+    if t == "A":
+        return {"speed": 80 * (1 - k) * sysq, "recall": 0.5 + 0.45 * k, "mem_gib": 1.0}
+    return {"speed": 50 * (1 - k) * sysq, "recall": 0.6 + 0.39 * k, "mem_gib": 0.5}
+
+
+def test_vdtuner_runs_and_beats_random():
+    space = _toy_space()
+    vt = VDTuner(space, _toy_objective, seed=0, abandon_window=6).run(25)
+    rl = RandomLHS(space, _toy_objective, seed=0).run(25)
+    ref = np.zeros(2)
+    norm = np.array([80.0, 1.0])
+    hv_vt = hv_2d(pareto_front(vt.Y) / norm, ref)
+    hv_rl = hv_2d(pareto_front(rl.Y) / norm, ref)
+    assert hv_vt >= hv_rl * 0.95  # statistically dominant; allow slack for one seed
+    assert len(vt.history) == 25
+    assert all(np.isfinite(o.y).all() for o in vt.history)
+
+
+def test_vdtuner_constraint_mode_respects_floor():
+    space = _toy_space()
+    vt = VDTuner(space, _toy_objective, seed=1, rlim=0.85).run(25)
+    feas = [o for o in vt.history if o.y[1] >= 0.85]
+    assert len(feas) >= 5  # the CEI acquisition concentrates sampling in-feasible
+
+
+def test_vdtuner_bootstrap_warm_start():
+    space = _toy_space()
+    first = VDTuner(space, _toy_objective, seed=2, rlim=0.8).run(15)
+    second = VDTuner(
+        space, _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history
+    )
+    second.run(10)
+    fresh = [o for o in second.history if not o.bootstrap]
+    assert len(fresh) == 10  # bootstrapped points are not re-evaluated
+
+
+def test_failed_config_gets_worst_feedback():
+    space = _toy_space()
+    calls = {"n": 0}
+
+    def flaky(cfg):
+        calls["n"] += 1
+        if calls["n"] % 5 == 0:
+            from repro.core import TuningFailure
+
+            raise TuningFailure("boom")
+        return _toy_objective(cfg)
+
+    vt = VDTuner(space, flaky, seed=4).run(15)
+    failed = [o for o in vt.history if o.failed]
+    assert failed, "some configs should have failed"
+    for o in failed:
+        # feedback = worst values in history AT FAILURE TIME (paper §V-A)
+        prior = np.stack([p.y for p in vt.history[: o.iteration] if not p.failed])
+        assert (o.y <= prior.min(axis=0) + 1e-12).all()

@@ -1,0 +1,140 @@
+"""VDMS substrate behaviour: segments, indexes, engine measurements, and the
+structural properties the paper's tuning problem depends on."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tuner import TuningFailure
+from repro.vdms import (
+    VDMSInstance, VDMSTuningEnv, make_dataset, make_space, plan_segments,
+    recall_at_k, stack_sealed,
+)
+
+BASE_SYS = dict(
+    segment_max_size=1024, seal_proportion=0.75, graceful_time=0.2,
+    search_batch_size=16, topk_merge_width=32, kmeans_iters=8, storage_bf16=False,
+)
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(256, 20000), st.integers(64, 8192),
+    st.floats(0.1, 1.0), st.floats(0.0, 0.9),
+)
+def test_segment_plan_partitions_data(n, smax, seal, graceful):
+    plan = plan_segments(n, smax, seal, graceful)
+    assert plan.growing_start + plan.growing_size == n
+    assert plan.sealed_valid.sum() == plan.growing_start
+    assert 0 <= plan.growing_searched <= plan.growing_size
+    assert plan.n_sealed >= 1
+
+
+def test_stack_sealed_ids_complete():
+    data = np.random.default_rng(0).standard_normal((1000, 8)).astype(np.float32)
+    plan = plan_segments(1000, 300, 0.5, 0.0)
+    segs, gids = stack_sealed(data, plan)
+    valid = gids[gids >= 0]
+    assert len(np.unique(valid)) == plan.growing_start
+    assert segs.shape == (plan.n_sealed, plan.seg_size, 8)
+
+
+# ---------------------------------------------------------------------------
+# indexes / engine
+# ---------------------------------------------------------------------------
+INDEX_CFGS = [
+    dict(index_type="FLAT"),
+    dict(index_type="IVF_FLAT", nlist=32, nprobe=8),
+    dict(index_type="IVF_SQ8", nlist=32, nprobe=8),
+    dict(index_type="IVF_PQ", nlist=32, nprobe=8, m=8, nbits=8),
+    dict(index_type="HNSW", M=16, efConstruction=64, ef=64),
+    dict(index_type="SCANN", nlist=32, nprobe=8, reorder_k=64),
+    dict(index_type="AUTOINDEX"),
+]
+
+
+@pytest.mark.parametrize("icfg", INDEX_CFGS, ids=lambda c: c["index_type"])
+def test_index_search_and_measure(small_dataset, icfg):
+    cfg = {**BASE_SYS, **icfg}
+    inst = VDMSInstance(small_dataset, cfg, seed=0)
+    r = inst.measure(repeats=1, mode="analytic")
+    assert r["speed"] > 0 and 0.0 <= r["recall"] <= 1.0
+    assert r["mem_gib"] > 0
+    # a sane index on easy clustered data should retrieve something real
+    min_recall = {"IVF_PQ": 0.02}.get(icfg["index_type"], 0.3)
+    assert r["recall"] >= min_recall, icfg
+
+
+def test_flat_exact_when_everything_searched(small_dataset):
+    cfg = {**BASE_SYS, "index_type": "FLAT", "graceful_time": 0.0,
+           "topk_merge_width": 128}
+    inst = VDMSInstance(small_dataset, cfg, seed=0)
+    r = inst.measure(repeats=1, mode="analytic")
+    assert r["recall"] == pytest.approx(1.0)
+
+
+def test_nprobe_monotone_recall_and_cost(small_dataset):
+    recalls, costs = [], []
+    for nprobe in (1, 4, 16):
+        cfg = {**BASE_SYS, "index_type": "IVF_FLAT", "nlist": 32, "nprobe": nprobe}
+        inst = VDMSInstance(small_dataset, cfg, seed=0)
+        r = inst.measure(repeats=1, mode="analytic")
+        recalls.append(r["recall"])
+        costs.append(1.0 / r["speed"])
+    assert recalls[0] <= recalls[-1] + 1e-9
+    assert costs[0] < costs[-1]  # probing more clusters costs more
+
+
+def test_graceful_time_trades_recall_for_speed():
+    ds = make_dataset("glove_like", n=1500, n_queries=32, k=10, seed=1)
+    # growing tail = everything beyond one sealed segment
+    out = {}
+    for g in (0.0, 0.9):
+        cfg = {**BASE_SYS, "segment_max_size": 1024, "seal_proportion": 1.0,
+               "graceful_time": g, "index_type": "FLAT"}
+        r = VDMSInstance(ds, cfg, seed=0).measure(repeats=1, mode="analytic")
+        out[g] = r
+    assert out[0.0]["recall"] >= out[0.9]["recall"]
+    assert out[0.9]["speed"] >= out[0.0]["speed"]
+
+
+def test_storage_bf16_cuts_memory(small_dataset):
+    cfgs = [
+        {**BASE_SYS, "index_type": "FLAT", "storage_bf16": b} for b in (False, True)
+    ]
+    mems = [VDMSInstance(small_dataset, c, seed=0).measure(repeats=1, mode="analytic")["mem_gib"]
+            for c in cfgs]
+    assert mems[1] < mems[0]
+
+
+def test_recall_at_k_bounds():
+    gt = np.array([[0, 1, 2], [3, 4, 5]], dtype=np.int32)
+    assert recall_at_k(gt, gt) == 1.0
+    assert recall_at_k(np.full_like(gt, 99), gt) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# tuning env
+# ---------------------------------------------------------------------------
+def test_tuning_env_objective_and_cache(small_dataset):
+    env = VDMSTuningEnv(small_dataset, mode="analytic", seed=0)
+    space = make_space()
+    cfg = space.default_config("IVF_FLAT")
+    r1 = env(cfg)
+    n = env.n_evals
+    r2 = env(cfg)  # cached
+    assert env.n_evals == n
+    assert r1["speed"] == r2["speed"]
+    assert set(r1) >= {"speed", "recall", "mem_gib", "build_time"}
+
+
+def test_tuning_env_space_is_16_dimensional():
+    space = make_space()
+    # index type + 8 distinct index params + 7 system params (paper §V-A)
+    n_index_params = sum(len(ps) for ps in space.index_types.values())
+    assert len(space.system_params) == 7
+    distinct = {p.name for ps in space.index_types.values() for p in ps}
+    assert len(distinct) == 8
+    assert space.dims == len(space.type_names) + n_index_params + 7
