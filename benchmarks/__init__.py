@@ -1,0 +1,1 @@
+"""Benchmark suite (run modules via ``python -m benchmarks.<name>``)."""

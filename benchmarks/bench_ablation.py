@@ -6,10 +6,9 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import VDTuner
-from repro.core.normalize import npi_normalize
 from repro.vdms import make_space
 
-from .common import N_ITERS, RECALL_FLOORS, emit, make_env, run_method
+from .common import N_ITERS, RECALL_FLOORS, emit, make_env
 
 
 class VDTunerNoAbandon(VDTuner):
@@ -28,7 +27,7 @@ class VDTunerNativeGP(VDTuner):
 
     name = "vdtuner_native"
 
-    def step(self):
+    def step(self, max_new=None):
         import repro.core.tuner as tuner_mod
 
         orig = tuner_mod.npi_normalize
@@ -41,7 +40,7 @@ class VDTunerNativeGP(VDTuner):
 
         tuner_mod.npi_normalize = raw_normalize
         try:
-            return super().step()
+            return super().step(max_new=max_new)
         finally:
             tuner_mod.npi_normalize = orig
 

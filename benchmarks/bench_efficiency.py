@@ -1,9 +1,21 @@
 """Paper Fig. 6 + Fig. 7: best search speed at recall floors per method, and
-samples/time needed to reach the most-competitive-baseline quality."""
+samples/time needed to reach the most-competitive-baseline quality.
+
+Also exposes the batch-parallel tuning axis: ``--batch-sizes 1 4`` runs the
+same VDTuner iteration budget at each ``q`` and reports wall-clock tuning
+time vs. batch size (``--check-speedup`` turns a q>1 regression into a
+non-zero exit for CI smoke-bench gating).
+"""
 from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
 
 import numpy as np
 
+from repro.core import VDTuner, hv_2d, pareto_front
 from repro.vdms import make_space
 
 from .common import DATASETS, N_ITERS, RECALL_FLOORS, emit, make_env, run_method
@@ -60,5 +72,99 @@ def run(seed: int = 0, datasets=DATASETS):
     return out
 
 
+def run_batched(
+    seed: int = 0,
+    dataset: str = "glove_like",
+    batch_sizes=(1, 4),
+    n_iters: int = N_ITERS,
+    mode: str = "analytic",
+):
+    """Wall-clock tuning time vs. batch size q at a fixed iteration budget.
+
+    Each q gets a fresh environment (cold caches, cold compile) so the
+    comparison reflects a full tuning session. Reports total wall, the
+    recommendation/evaluation split, and the normalized Pareto hypervolume so
+    speedups can't silently trade away tuning quality.
+    """
+    space = make_space()
+    out = {}
+    for q in batch_sizes:
+        env = make_env(dataset, seed=seed, mode=mode)
+        t0 = time.perf_counter()
+        tuner = VDTuner(space, env, seed=seed, q=int(q)).run(n_iters)
+        wall = time.perf_counter() - t0
+        ys = tuner.Y
+        norm = ys.max(axis=0)
+        norm = np.where(norm <= 0, 1.0, norm)
+        hv = hv_2d(pareto_front(ys) / norm, np.zeros(2))
+        out[str(q)] = {
+            "q": int(q),
+            "n_iters": n_iters,
+            "wall_s": wall,
+            "recommend_s": float(sum(o.recommend_time for o in tuner.history)),
+            "replay_s": float(env.total_replay_time),
+            "n_evals": int(env.n_evals),
+            "hv_norm": float(hv),
+        }
+        emit(f"efficiency_batched/{dataset}/q{q}", wall * 1e6 / n_iters,
+             f"wall={wall:.2f}s;hv={hv:.3f}")
+    return out
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--batch-sizes", type=int, nargs="+", default=None,
+                   help="run the batched-tuning axis at these q values "
+                        "(omit to run the full Fig. 6/7 method comparison)")
+    p.add_argument("--iters", type=int, default=None,
+                   help=f"iteration budget for the batched axis (default {N_ITERS})")
+    p.add_argument("--dataset", default=None,
+                   help="dataset for the batched axis (default glove_like)")
+    p.add_argument("--mode", default=None, choices=("analytic", "wall"),
+                   help="measurement mode for the batched axis (default analytic)")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="write results as JSON (CI artifact)")
+    p.add_argument("--check-speedup", action="store_true",
+                   help="exit 1 unless every q>1 wall-clock is strictly below q=1")
+    args = p.parse_args(argv)
+    args.iters = args.iters if args.iters is not None else N_ITERS
+    args.dataset = args.dataset or "glove_like"
+    args.mode = args.mode or "analytic"
+
+    if args.batch_sizes is None:
+        if (args.iters, args.dataset, args.mode) != (N_ITERS, "glove_like", "analytic"):
+            p.error("--iters/--dataset/--mode only apply with --batch-sizes; the "
+                    "full figure run is configured via REPRO_BENCH_FULL")
+        results = run(seed=args.seed)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(results, f, indent=2, default=str)
+        print(results)
+        return 0
+
+    results = run_batched(seed=args.seed, dataset=args.dataset,
+                          batch_sizes=args.batch_sizes, n_iters=args.iters,
+                          mode=args.mode)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+    for q, r in results.items():
+        print(f"q={q}: wall={r['wall_s']:.2f}s recommend={r['recommend_s']:.2f}s "
+              f"replay={r['replay_s']:.2f}s hv={r['hv_norm']:.3f}")
+    if args.check_speedup and "1" in results:
+        base = results["1"]["wall_s"]
+        slow = {q: r["wall_s"] for q, r in results.items()
+                if r["q"] > 1 and r["wall_s"] >= base}
+        if slow:
+            print(f"SPEEDUP REGRESSION: q=1 wall {base:.2f}s, slower batched runs: "
+                  f"{ {q: round(w, 2) for q, w in slow.items()} }", file=sys.stderr)
+            return 1
+        print(f"speedup check OK: q=1 {base:.2f}s > " +
+              ", ".join(f"q={r['q']} {r['wall_s']:.2f}s"
+                        for r in results.values() if r["q"] > 1))
+    return 0
+
+
 if __name__ == "__main__":
-    print(run())
+    sys.exit(main())

@@ -2,7 +2,6 @@
 workload replay) per method."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.vdms import make_space
 

@@ -3,15 +3,14 @@ from __future__ import annotations
 
 import os
 import time
-from typing import Dict, List, Optional
+from typing import Optional
 
 import numpy as np
 
 from repro.core import (
-    ALL_BASELINES, DefaultOnly, OpenTunerLike, OtterTuneLike, QEHVI, RandomLHS,
-    VDTuner, hv_2d, pareto_front,
+    DefaultOnly, OpenTunerLike, OtterTuneLike, QEHVI, RandomLHS, VDTuner, hv_2d, pareto_front,
 )
-from repro.vdms import VDMSTuningEnv, make_dataset, make_space
+from repro.vdms import VDMSTuningEnv, make_dataset
 
 # benchmark scale knobs (FULL=1 reproduces paper-scale runs)
 FULL = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))

@@ -6,7 +6,6 @@ configurations that maximize BOTH search speed (QPS) and recall@10.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.core import VDTuner, pareto_front
 from repro.vdms import VDMSTuningEnv, make_dataset, make_space

@@ -13,7 +13,6 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def _round_up(v: int, m: int) -> int:

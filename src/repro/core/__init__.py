@@ -1,5 +1,5 @@
 """VDTuner core: multi-objective Bayesian optimization for system tuning."""
-from .acquisition import cei, ehvi_mc, ei
+from .acquisition import cei, ehvi_mc, ei, greedy_select, qehvi_sequential_greedy
 from .baselines import ALL_BASELINES, DefaultOnly, OpenTunerLike, OtterTuneLike, QEHVI, RandomLHS
 from .budget import SuccessiveAbandon, scores_by_hv_influence
 from .gp import GP
@@ -13,6 +13,6 @@ __all__ = [
     "ALL_BASELINES", "Config", "DefaultOnly", "GP", "Observation", "OpenTunerLike",
     "OtterTuneLike", "Param", "QEHVI", "RandomLHS", "SearchSpace", "SuccessiveAbandon",
     "TunerBase", "TuningFailure", "VDTuner", "balanced_base", "cei", "cost_aware_transform",
-    "ehvi_mc", "ei", "hv_2d", "hvi_2d", "max_base", "non_dominated_mask", "npi_normalize",
-    "pareto_front", "scores_by_hv_influence",
+    "ehvi_mc", "ei", "greedy_select", "hv_2d", "hvi_2d", "max_base", "non_dominated_mask",
+    "npi_normalize", "pareto_front", "qehvi_sequential_greedy", "scores_by_hv_influence",
 ]

@@ -1,11 +1,14 @@
-"""Acquisition functions: MC-EHVI (Eq. 4), EI, and constrained EI (Eq. 7)."""
+"""Acquisition functions: MC-EHVI (Eq. 4), EI, constrained EI (Eq. 7), and
+sequential-greedy q-EHVI batch selection with Kriging-believer fantasies."""
 from __future__ import annotations
 
 import math as _math
+from typing import List
 
 import numpy as np
 
 from .hypervolume import hvi_2d
+from .pareto import pareto_front
 
 _erf_vec = np.frompyfunc(_math.erf, 1, 1)
 
@@ -44,6 +47,59 @@ def ehvi_mc(
     flat = samples.reshape(-1, 2)
     hvi = hvi_2d(flat, front, ref).reshape(n_samples, c)
     return hvi.mean(axis=0)
+
+
+def greedy_select(gp, Xc: np.ndarray, q: int, score_fn, on_fantasy=None) -> List[int]:
+    """Sequential-greedy batch selection with Kriging-believer fantasies.
+
+    Picks ``q`` distinct candidate indices: at each round ``score_fn(mean,
+    std)`` scores all candidates from the current posterior, the best
+    still-available one is taken, and the posterior is conditioned on the
+    fantasy (the posterior mean at the pick) via ``gp.condition_on`` so later
+    picks spread across the candidate set instead of clustering on one
+    acquisition peak. ``on_fantasy(fantasy)`` lets callers update incumbent
+    state (running front, best-feasible) between picks.
+
+    For ``q == 1`` this is exactly one ``gp.predict`` + one ``score_fn``
+    call — identical RNG consumption and argmax to a single-point step.
+    """
+    q = min(q, Xc.shape[0])
+    chosen: List[int] = []
+    avail = np.ones(Xc.shape[0], dtype=bool)
+    for j in range(q):
+        mean, std = gp.predict(Xc)
+        acq = np.where(avail, score_fn(mean, std), -np.inf)
+        i = int(np.argmax(acq))
+        chosen.append(i)
+        avail[i] = False
+        if j + 1 < q:
+            fantasy = mean[i]
+            gp = gp.condition_on(Xc[i][None], fantasy[None])
+            if on_fantasy is not None:
+                on_fantasy(fantasy)
+    return chosen
+
+
+def qehvi_sequential_greedy(
+    gp,
+    Xc: np.ndarray,
+    front: np.ndarray,
+    ref: np.ndarray,
+    rng: np.random.Generator,
+    q: int,
+    n_samples: int = 64,
+) -> List[int]:
+    """Sequential-greedy q-EHVI: each Kriging-believer fantasy joins the
+    running non-dominated front before the next pick."""
+    state = {"front": np.asarray(front, np.float64)}
+
+    def score(mean, std):
+        return ehvi_mc(mean, std, state["front"], ref, rng, n_samples)
+
+    def on_fantasy(fantasy):
+        state["front"] = pareto_front(np.vstack([state["front"], fantasy[None]]))
+
+    return greedy_select(gp, Xc, q, score, on_fantasy)
 
 
 def ei(mean: np.ndarray, std: np.ndarray, best: float) -> np.ndarray:

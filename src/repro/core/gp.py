@@ -134,6 +134,14 @@ def _fit_padded(x, y, mask, key, steps: int = 120):
 
     keys = jax.random.split(key, m)
     log_ls, log_sf, log_noise = jax.vmap(fit_one, in_axes=(1, 0))(y, keys)
+    chol, alpha = _posterior_padded(log_ls, log_sf, log_noise, x, y, mask)
+    return (log_ls, log_sf, log_noise), chol, alpha
+
+
+@jax.jit
+def _posterior_padded(log_ls, log_sf, log_noise, x, y, mask):
+    """Cholesky + weights per output for fixed hyperparameters (padded rows
+    removed through the big-noise mask). Shared by fit and `condition_on`."""
 
     def posterior_terms(ls_i, sf_i, nz_i, y_col):
         k = matern52(x, x, ls_i, sf_i)
@@ -144,8 +152,7 @@ def _fit_padded(x, y, mask, key, steps: int = 120):
         alpha = jax.scipy.linalg.cho_solve((chol, True), y_col)
         return chol, alpha
 
-    chol, alpha = jax.vmap(posterior_terms, in_axes=(0, 0, 0, 1))(log_ls, log_sf, log_noise, y)
-    return (log_ls, log_sf, log_noise), chol, alpha
+    return jax.vmap(posterior_terms, in_axes=(0, 0, 0, 1))(log_ls, log_sf, log_noise, y)
 
 
 @jax.jit
@@ -217,3 +224,49 @@ class GP:
         mean = np.asarray(mean) * np.asarray(s.y_std) + np.asarray(s.y_mean)
         std = np.sqrt(np.asarray(var)) * np.asarray(s.y_std)
         return mean, std
+
+    def condition_on(self, X_new: np.ndarray, Y_new: np.ndarray) -> "GP":
+        """Posterior conditioning on extra observations (original Y units)
+        without refitting hyperparameters.
+
+        Used for Kriging-believer fantasies in sequential-greedy batch
+        acquisition: the fitted kernel is kept, the new points join the
+        training set (into free padded rows, re-padding when full), and only
+        the Cholesky/weights are recomputed. Returns a new GP; self is
+        untouched.
+        """
+        assert self.state is not None, "fit() first"
+        s = self.state
+        d = s.x.shape[1]
+        m = s.y.shape[1]
+        n_real = int(np.asarray(s.mask).sum())
+        X_new = np.asarray(X_new, np.float32).reshape(-1, d)
+        Y_new = np.asarray(Y_new, np.float32).reshape(-1, m)
+        Yn_new = (Y_new - np.asarray(s.y_mean)) / np.asarray(s.y_std)
+        n_tot = n_real + X_new.shape[0]
+        n_pad = int(np.ceil(n_tot / PAD) * PAD)
+        xp = np.zeros((n_pad, d), np.float32)
+        yp = np.zeros((n_pad, m), np.float32)
+        maskp = np.zeros((n_pad,), np.float32)
+        xp[:n_real] = np.asarray(s.x)[:n_real]
+        yp[:n_real] = np.asarray(s.y)[:n_real]
+        xp[n_real:n_tot] = X_new
+        yp[n_real:n_tot] = Yn_new
+        maskp[:n_tot] = 1.0
+        chol, alpha = _posterior_padded(
+            s.params.log_ls, s.params.log_sf, s.params.log_noise,
+            jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(maskp),
+        )
+        out = GP(fit_steps=self.fit_steps)
+        out._key = self._key
+        out.state = GPState(
+            params=s.params,
+            x=jnp.asarray(xp),
+            y=jnp.asarray(yp),
+            mask=jnp.asarray(maskp),
+            chol=chol,
+            alpha=alpha,
+            y_mean=s.y_mean,
+            y_std=s.y_std,
+        )
+        return out

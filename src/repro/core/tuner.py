@@ -9,7 +9,11 @@ changes with the index type. Components:
 * MC-EHVI acquisition with ref = 0.5 * per-type balanced base (Eq. 4),
 * round-robin polling with successive abandon (Eq. 5–6, windowed trigger),
 * optional recall-floor constraint mode with CEI (Eq. 7) and bootstrapping
-  from previous constraint levels (§IV-F).
+  from previous constraint levels (§IV-F),
+* batch-parallel rounds (``q > 1``): sequential-greedy q-EHVI / q-CEI with
+  Kriging-believer fantasies, evaluated through the objective's vectorized
+  ``evaluate_batch`` when available. ``q == 1`` reproduces the original
+  single-point trajectory exactly.
 """
 from __future__ import annotations
 
@@ -19,7 +23,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .acquisition import cei, ehvi_mc
+from .acquisition import cei, greedy_select, qehvi_sequential_greedy
 from .budget import SuccessiveAbandon
 from .gp import GP
 from .normalize import npi_normalize
@@ -84,30 +88,61 @@ class TunerBase:
         self._seed = seed
 
     # ------------------------------------------------------------------
-    def _evaluate(self, cfg: Config, recommend_time: float) -> Observation:
-        t0 = time.perf_counter()
+    def _record(
+        self, cfg: Config, result: Any, recommend_time: float, eval_time: float
+    ) -> Observation:
+        """Append one observation. ``result`` is either the raw objective dict
+        or an Exception instance marking a failed evaluation (paper §V-A:
+        failed configs get the worst values in history at record time)."""
         failed = False
-        try:
-            raw = self.objective(cfg)
-            y = np.asarray(self.transform(raw), np.float64)
-            if not np.all(np.isfinite(y)):
-                raise TuningFailure("non-finite objective")
-        except TuningFailure:
-            # paper §V-A: failed configs get the worst values in history
-            failed = True
-            raw = {}
-            y = self._worst_so_far()
+        if isinstance(result, Exception):
+            failed, raw, y = True, {}, self._worst_so_far()
+        else:
+            raw = result
+            try:
+                y = np.asarray(self.transform(raw), np.float64)
+                if not np.all(np.isfinite(y)):
+                    raise TuningFailure("non-finite objective")
+            except TuningFailure:
+                failed, raw, y = True, {}, self._worst_so_far()
         obs = Observation(
             iteration=len(self.history),
             config=cfg,
             y=y,
             raw=raw,
             recommend_time=recommend_time,
-            eval_time=time.perf_counter() - t0,
+            eval_time=eval_time,
             failed=failed,
         )
         self.history.append(obs)
         return obs
+
+    def _evaluate(self, cfg: Config, recommend_time: float) -> Observation:
+        t0 = time.perf_counter()
+        try:
+            result: Any = self.objective(cfg)
+        except TuningFailure as e:
+            result = e
+        return self._record(cfg, result, recommend_time, time.perf_counter() - t0)
+
+    def _evaluate_batch(
+        self, cfgs: Sequence[Config], recommend_time: float
+    ) -> List[Observation]:
+        """Evaluate a batch, preferring the objective's vectorized
+        ``evaluate_batch`` (e.g. ``VDMSTuningEnv``) when it exposes one.
+
+        Results are recorded in config order one at a time, so the worst-value
+        fallback for failed configs sees exactly the history a sequential run
+        would have seen. Single-config batches always take the sequential path
+        (keeps q=1 behavior identical to the pre-batch tuner).
+        """
+        eb = getattr(self.objective, "evaluate_batch", None)
+        if eb is None or len(cfgs) == 1:
+            return [self._evaluate(c, recommend_time) for c in cfgs]
+        t0 = time.perf_counter()
+        results = eb(list(cfgs))
+        per_cfg = (time.perf_counter() - t0) / max(len(cfgs), 1)
+        return [self._record(c, r, recommend_time, per_cfg) for c, r in zip(cfgs, results)]
 
     def _worst_so_far(self) -> np.ndarray:
         ys = [o.y for o in self.history if not o.failed]
@@ -158,13 +193,17 @@ class VDTuner(TunerBase):
         gp_fit_steps: int = 120,
         rlim: Optional[float] = None,
         bootstrap_history: Optional[Sequence[Observation]] = None,
+        q: int = 1,
     ):
         super().__init__(space, objective, seed, transform)
+        if q < 1:
+            raise ValueError(f"q must be >= 1, got {q}")
         self.abandon = SuccessiveAbandon(space.type_names, window=abandon_window)
         self.n_candidates = n_candidates
         self.mc_samples = mc_samples
         self.gp_fit_steps = gp_fit_steps
         self.rlim = rlim  # user recall-floor preference (constraint mode)
+        self.q = q  # configurations proposed (and evaluated) per BO round
         self._poll_cursor = 0
         if bootstrap_history:
             # §IV-F: warm-start the surrogate with data from previous
@@ -175,12 +214,21 @@ class VDTuner(TunerBase):
 
     # ------------------------------------------------------------------
     def _initial_sampling(self):
-        """Algorithm 1 lines 1–5: each index type's default configuration."""
+        """Algorithm 1 lines 1–5: each index type's default configuration.
+
+        With ``q > 1`` the defaults go through the batch evaluation path (they
+        are independent, so batching them is free parallelism); with ``q == 1``
+        they are evaluated sequentially exactly as before.
+        """
         seen = set(o.index_type for o in self.history)
-        for t in self.space.type_names:
-            if t in seen:
-                continue  # bootstrapped data already covers this type
-            self._evaluate(self.space.default_config(t), recommend_time=0.0)
+        todo = [self.space.default_config(t) for t in self.space.type_names if t not in seen]
+        if not todo:
+            return
+        if self.q > 1:
+            self._evaluate_batch(todo, recommend_time=0.0)
+        else:
+            for cfg in todo:
+                self._evaluate(cfg, recommend_time=0.0)
 
     def _next_poll_type(self) -> str:
         remaining = self.abandon.remaining
@@ -212,8 +260,53 @@ class VDTuner(TunerBase):
             cands += self.space.sample(self.rng, self.n_candidates - len(cands), index_type=t)
         return cands
 
-    def step(self) -> Observation:
+    def _cei_select(
+        self,
+        gp: GP,
+        Xc: np.ndarray,
+        Y: np.ndarray,
+        bases: Dict[str, np.ndarray],
+        t: str,
+        q: int,
+    ) -> List[int]:
+        """Sequential-greedy constrained-EI selection (Eq. 7) for a batch.
+
+        Thresholds are in the polled type's normalized units. After each pick
+        the Kriging-believer fantasy conditions the posterior, and — if the
+        fantasy clears the recall floor — raises the feasible-speed incumbent.
+        """
+        base_t = bases.get(t, np.array([1.0, 1.0]))
+        rlim_n = self.rlim / base_t[1]
+        feas = Y[:, 1] >= self.rlim
+        if feas.any():
+            spd_n = np.array(
+                [o.y[0] / bases[o.index_type][0] for o, f in zip(self.history, feas) if f]
+            )
+            best_feasible = float(spd_n.max())
+        else:
+            best_feasible = float("-inf")
+        state = {"best": best_feasible}
+
+        def score(mean, std):
+            return cei(mean[:, 0], std[:, 0], mean[:, 1], std[:, 1], state["best"], rlim_n)
+
+        def on_fantasy(fantasy):
+            if fantasy[1] >= rlim_n:
+                state["best"] = max(state["best"], float(fantasy[0]))
+
+        return greedy_select(gp, Xc, q, score, on_fantasy)
+
+    def step(self, max_new: Optional[int] = None) -> List[Observation]:
+        """One BO round: poll a type, propose ``q`` configs by sequential-greedy
+        acquisition (Kriging-believer fantasies between picks), evaluate the
+        batch, and record the observations in proposal order.
+
+        ``max_new`` clamps the batch so a run never overshoots its iteration
+        budget. With ``q == 1`` the round consumes exactly the same RNG draws
+        and picks the same argmax as the original single-point step.
+        """
         t0 = time.perf_counter()
+        q = self.q if max_new is None else max(1, min(self.q, max_new))
         Y, types = self.Y, self.types
 
         # --- successive abandon (lines 7–14) ---------------------------
@@ -229,7 +322,6 @@ class VDTuner(TunerBase):
         t = self._next_poll_type()
         cands = self._candidates(t)
         Xc = np.stack([self.space.encode(c) for c in cands])
-        mean, std = gp.predict(Xc)
 
         if self.rlim is None:
             # EHVI with ref = 0.5 * base; in normalized space the base is
@@ -237,30 +329,24 @@ class VDTuner(TunerBase):
             # non-dominated set across all types (§IV-C).
             front = Yn[non_dominated_mask(Yn)]
             ref = np.array([0.5, 0.5])
-            acq = ehvi_mc(mean, std, front, ref, self.rng, self.mc_samples)
+            idx = qehvi_sequential_greedy(
+                gp, Xc, front, ref, self.rng, q, self.mc_samples
+            )
         else:
-            # constraint mode: EI(speed) * Pr(recall > rlim), thresholds in the
-            # candidate type's normalized units.
-            base_t = bases.get(t, np.array([1.0, 1.0]))
-            rlim_n = self.rlim / base_t[1]
-            feas = Y[:, 1] >= self.rlim
-            if feas.any():
-                spd_n = np.array(
-                    [o.y[0] / bases[o.index_type][0] for o, f in zip(self.history, feas) if f]
-                )
-                best_feasible = float(spd_n.max())
-            else:
-                best_feasible = float("-inf")
-            acq = cei(mean[:, 0], std[:, 0], mean[:, 1], std[:, 1], best_feasible, rlim_n)
+            # constraint mode: EI(speed) * Pr(recall > rlim).
+            idx = self._cei_select(gp, Xc, Y, bases, t, q)
 
-        cfg = cands[int(np.argmax(acq))]
+        cfgs = [cands[i] for i in idx]
         rec_time = time.perf_counter() - t0
 
         # --- evaluate & update (line 22) --------------------------------
-        return self._evaluate(cfg, recommend_time=rec_time)
+        return self._evaluate_batch(cfgs, recommend_time=rec_time / len(cfgs))
 
     def run(self, n_iters: int) -> "VDTuner":
         self._initial_sampling()
-        while len([o for o in self.history if not o.bootstrap]) < n_iters:
-            self.step()
+        while True:
+            done = len([o for o in self.history if not o.bootstrap])
+            if done >= n_iters:
+                break
+            self.step(max_new=n_iters - done)
         return self

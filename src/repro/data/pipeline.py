@@ -13,7 +13,7 @@ Markov-ish repeats, so a ~100M model shows a real, declining loss curve
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Iterator
 
 import numpy as np
 

@@ -7,8 +7,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import threading
-import time
-from typing import Callable, List, Optional
+from typing import List, Optional
 
 
 @dataclasses.dataclass

@@ -16,7 +16,6 @@ from functools import partial
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 

@@ -11,12 +11,10 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from ..checkpoint.manager import CheckpointManager
 from ..configs.base import get_arch, reduce as reduce_cfg

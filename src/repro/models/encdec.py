@@ -7,7 +7,7 @@ cache plus precomputed cross-attention K/V over the encoder output.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

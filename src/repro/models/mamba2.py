@@ -9,7 +9,7 @@ Decode is the O(1) recurrence: h <- h * exp(dt*A) + dt * (B outer x).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

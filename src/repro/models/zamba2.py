@@ -8,7 +8,7 @@ layers are lax.scan'd, then the shared block is applied.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

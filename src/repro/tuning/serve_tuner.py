@@ -18,10 +18,8 @@ to minutes — the same cost profile as the paper's index-rebuild evaluations.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Dict
 
-import jax
 
 from ..configs.base import SHAPES, ArchConfig
 from ..core.space import Param, SearchSpace

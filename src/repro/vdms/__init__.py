@@ -1,12 +1,13 @@
 """JAX-native vector data management system (the system under tune)."""
 from .datasets import VectorDataset, exact_topk, make_dataset, recall_at_k
-from .engine import VDMSInstance
+from .engine import VDMSInstance, batch_signature, measure_batch
 from .indexes import INDEX_TYPES, IndexBundle, build_index, search_index
 from .segments import SegmentPlan, plan_segments, stack_sealed
 from .tuning_env import VDMSTuningEnv, make_space
 
 __all__ = [
     "INDEX_TYPES", "IndexBundle", "SegmentPlan", "VDMSInstance", "VDMSTuningEnv",
-    "VectorDataset", "build_index", "exact_topk", "make_dataset", "make_space",
-    "plan_segments", "recall_at_k", "search_index", "stack_sealed",
+    "VectorDataset", "batch_signature", "build_index", "exact_topk", "make_dataset",
+    "make_space", "measure_batch", "plan_segments", "recall_at_k", "search_index",
+    "stack_sealed",
 ]

@@ -15,7 +15,6 @@ survive the scale-down:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
 
 import numpy as np
 

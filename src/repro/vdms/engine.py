@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import time
 from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,8 +30,7 @@ _SEG_OVERHEAD = 5.0e-5  # per-segment merge overhead per chunk (s)
 _STEP_OVERHEAD = 6.0e-6  # per sequential graph-walk step (s)
 
 
-@partial(jax.jit, static_argnames=("kind", "statics", "k_seg", "topk"))
-def _pipeline(qc, arrays, growing, growing_gids, kind, statics, k_seg, topk):
+def _pipeline_impl(qc, arrays, growing, growing_gids, kind, statics, k_seg, topk):
     """qc: (n_chunks, B, d) queries; returns (n_chunks, B, topk) global ids."""
     bundle = IndexBundle(kind=kind, arrays=arrays, static=dict(statics))
 
@@ -54,6 +53,24 @@ def _pipeline(qc, arrays, growing, growing_gids, kind, statics, k_seg, topk):
         return out
 
     return jax.lax.map(chunk_fn, qc)
+
+
+_pipeline = partial(jax.jit, static_argnames=("kind", "statics", "k_seg", "topk"))(
+    _pipeline_impl
+)
+
+
+@partial(jax.jit, static_argnames=("kind", "statics", "k_seg", "topk"))
+def _pipeline_batch(qc, arrays, growing, growing_gids, kind, statics, k_seg, topk):
+    """Vectorized multi-config dispatch: every per-instance operand carries a
+    leading batch axis (arrays values, growing, growing_gids); the query chunks
+    are shared. Returns (B, n_chunks, b, topk) global ids in ONE compiled
+    program, amortizing dispatch + compile across the batch."""
+
+    def one(arrays_i, growing_i, gids_i):
+        return _pipeline_impl(qc, arrays_i, growing_i, gids_i, kind, statics, k_seg, topk)
+
+    return jax.vmap(one)(arrays, growing, growing_gids)
 
 
 class VDMSInstance:
@@ -195,3 +212,99 @@ class VDMSInstance:
             "build_time": float(self.build_time),
             "compile_time": float(compile_time),
         }
+
+
+# ---------------------------------------------------------------------------
+# vectorized multi-config evaluation
+# ---------------------------------------------------------------------------
+def batch_signature(inst: VDMSInstance, topk: int | None = None) -> Tuple:
+    """Static-shape fingerprint of an instance's compiled search program.
+
+    Instances with equal signatures run the same XLA program modulo array
+    contents, so their pipelines can be stacked and dispatched together via
+    ``_pipeline_batch``.
+    """
+    topk = topk or inst.dataset.k
+    return (
+        inst.bundle.kind,
+        tuple(sorted(inst.bundle.static.items())),
+        tuple((k, a.shape, str(a.dtype)) for k, a in sorted(inst.bundle.arrays.items())),
+        (inst.growing.shape, str(inst.growing.dtype)),
+        inst.k_seg,
+        inst.batch,
+        topk,
+    )
+
+
+def measure_batch(
+    instances: List[VDMSInstance],
+    topk: int | None = None,
+    repeats: int = 3,
+    mode: str = "analytic",
+) -> List[Dict[str, float]]:
+    """Measure shape-identical instances in one vectorized dispatch.
+
+    All instances must share one dataset and one :func:`batch_signature`;
+    their arrays are stacked on a leading axis and searched by a single
+    vmapped program, so compile and dispatch cost is paid once per batch
+    instead of once per config. Recall is exact per config. In ``analytic``
+    mode speed comes from each instance's deterministic cost model (identical
+    to sequential ``measure``); in ``wall`` mode the batch is timed as one
+    program and each config is charged an equal share of the wall time
+    (amortized throughput — prefer per-instance measurement when single-config
+    latency fidelity matters).
+    """
+    if not instances:
+        return []
+    inst0 = instances[0]
+    ds = inst0.dataset
+    topk = topk or ds.k
+    if any(i.dataset is not ds for i in instances):
+        raise ValueError("measure_batch requires a single shared dataset")
+    if len({batch_signature(i, topk) for i in instances}) != 1:
+        raise ValueError("measure_batch requires shape-identical instances")
+    queries = ds.queries
+    qc = inst0._chunked_queries(queries)
+    arrays = {
+        k: jnp.stack([i.bundle.arrays[k] for i in instances]) for k in inst0.bundle.arrays
+    }
+    growing = jnp.stack([i.growing for i in instances])
+    gids = jnp.stack([i.growing_gids for i in instances])
+    args = (
+        qc,
+        arrays,
+        growing,
+        gids,
+        inst0.bundle.kind,
+        tuple(sorted(inst0.bundle.static.items())),
+        inst0.k_seg,
+        topk,
+    )
+    t0 = time.perf_counter()
+    out = np.asarray(jax.block_until_ready(_pipeline_batch(*args)))
+    compile_time = time.perf_counter() - t0
+    n_chunks = (queries.shape[0] + inst0.batch - 1) // inst0.batch
+    if mode == "analytic":
+        elapsed = [inst._analytic_seconds_per_chunk() * n_chunks for inst in instances]
+    else:
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(_pipeline_batch(*args))
+            times.append(time.perf_counter() - t0)
+        elapsed = [min(times) / len(instances)] * len(instances)
+    results = []
+    for i, inst in enumerate(instances):
+        ids = out[i].reshape(-1, topk)[: queries.shape[0]]
+        recall = recall_at_k(ids[:, : ds.k], ds.ground_truth)
+        qps = queries.shape[0] / max(elapsed[i], 1e-9)
+        results.append(
+            {
+                "speed": float(qps),
+                "recall": float(recall),
+                "mem_gib": float(inst.memory_gib()),
+                "build_time": float(inst.build_time),
+                "compile_time": float(compile_time),
+            }
+        )
+    return results

@@ -4,15 +4,15 @@ expensive black-box objective the tuners optimize.
 """
 from __future__ import annotations
 
+import os
 import time
-from typing import Any, Dict, Optional, Tuple
-
-import numpy as np
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core.space import Param, SearchSpace
 from ..core.tuner import TuningFailure
 from .datasets import VectorDataset
-from .engine import VDMSInstance
+from .engine import VDMSInstance, batch_signature, measure_batch
 
 # ---------------------------------------------------------------------------
 # Search space (16 dims: 1 index type + 8 index params + 7 system params)
@@ -81,12 +81,14 @@ class VDMSTuningEnv:
         seed: int = 0,
         build_timeout: float = 120.0,
         repeats: int = 3,
+        batch_workers: Optional[int] = None,
     ):
         self.dataset = dataset
         self.mode = mode
         self.seed = seed
         self.build_timeout = build_timeout
         self.repeats = repeats
+        self.batch_workers = batch_workers  # thread pool size for evaluate_batch
         self.cache: Dict[Tuple, Dict[str, float]] = {}
         self.n_evals = 0
         self.total_replay_time = 0.0
@@ -121,3 +123,116 @@ class VDMSTuningEnv:
             self.n_evals += 1
         self.cache[key] = dict(result)
         return result
+
+    # ------------------------------------------------------------------
+    # batch evaluation
+    # ------------------------------------------------------------------
+    def evaluate_batch(
+        self, cfgs: Sequence[Dict[str, Any]], max_workers: Optional[int] = None
+    ) -> List[Union[Dict[str, float], TuningFailure]]:
+        """Evaluate a batch of configurations, exploiting batch structure.
+
+        Pipeline: cache hits and in-batch duplicates are deduplicated; index
+        builds for the misses run in a thread pool (analytic mode only —
+        ``build_timeout`` is checked against wall-clock build time, so under
+        the pool it is approximate; wall mode builds sequentially to keep
+        build_time/timeout semantics exact); shape-identical instances (same
+        :func:`batch_signature`) are then measured in ONE vectorized dispatch
+        via :func:`measure_batch` (analytic mode, where the amortized path is
+        exact), while heterogeneous leftovers fall back to per-instance
+        measurement — threaded in analytic mode, sequential in wall mode so
+        wall-clock timings stay honest.
+
+        Returns one entry per input config, aligned with ``cfgs``: the raw
+        result dict, or the ``TuningFailure`` for configs that crashed/timed
+        out (this method never raises per-config — callers decide failure
+        semantics, e.g. the tuner's worst-value feedback).
+        """
+        results: List[Any] = [None] * len(cfgs)
+        pending: Dict[Tuple, List[int]] = {}
+        for i, cfg in enumerate(cfgs):
+            key = self._canon(cfg)
+            if key in self.cache:
+                results[i] = dict(self.cache[key])
+            else:
+                pending.setdefault(key, []).append(i)
+        if not pending:
+            return results
+        keys = list(pending)
+        miss_cfgs = [cfgs[pending[k][0]] for k in keys]
+        t0 = time.perf_counter()
+        try:
+            outs = self._evaluate_misses(miss_cfgs, max_workers)
+        finally:
+            self.total_replay_time += time.perf_counter() - t0
+            self.n_evals += len(miss_cfgs)
+        for key, out in zip(keys, outs):
+            if not isinstance(out, Exception):
+                self.cache[key] = dict(out)
+            for pos in pending[key]:
+                results[pos] = out if isinstance(out, Exception) else dict(out)
+        return results
+
+    def _evaluate_misses(
+        self, cfgs: Sequence[Dict[str, Any]], max_workers: Optional[int]
+    ) -> List[Union[Dict[str, float], TuningFailure]]:
+        def build(cfg: Dict[str, Any]) -> Union[VDMSInstance, TuningFailure]:
+            try:
+                inst = VDMSInstance(self.dataset, cfg, seed=self.seed)
+                if inst.build_time > self.build_timeout:
+                    raise TuningFailure(f"index build exceeded {self.build_timeout}s")
+                return inst
+            except TuningFailure as e:
+                return e
+            except (ValueError, ZeroDivisionError, RuntimeError) as e:
+                return TuningFailure(str(e))
+
+        def measure_one(inst: VDMSInstance) -> Union[Dict[str, float], TuningFailure]:
+            try:
+                return inst.measure(repeats=self.repeats, mode=self.mode)
+            except TuningFailure as e:
+                return e
+            except (ValueError, ZeroDivisionError, RuntimeError) as e:
+                return TuningFailure(str(e))
+
+        workers = max_workers or self.batch_workers or min(len(cfgs), os.cpu_count() or 4)
+        # Wall mode builds sequentially: each instance's build_time is compared
+        # against build_timeout, and concurrent builds inflate wall-clock under
+        # contention, spuriously failing configs a sequential run would accept.
+        if len(cfgs) == 1 or workers == 1 or self.mode != "analytic":
+            built = [build(c) for c in cfgs]
+        else:
+            with ThreadPoolExecutor(max_workers=workers) as ex:
+                built = list(ex.map(build, cfgs))
+
+        outs: List[Any] = [None] * len(cfgs)
+        groups: Dict[Tuple, List[int]] = {}
+        singles: List[int] = []
+        for i, inst in enumerate(built):
+            if isinstance(inst, Exception):
+                outs[i] = inst
+            elif self.mode == "analytic":
+                groups.setdefault(batch_signature(inst), []).append(i)
+            else:
+                singles.append(i)
+        for idxs in groups.values():
+            if len(idxs) == 1:
+                singles.append(idxs[0])
+                continue
+            try:
+                rs = measure_batch(
+                    [built[i] for i in idxs], repeats=self.repeats, mode=self.mode
+                )
+                for i, r in zip(idxs, rs):
+                    outs[i] = r
+            except (ValueError, ZeroDivisionError, RuntimeError):
+                singles.extend(idxs)  # defensive: re-measure per instance
+        if singles:
+            if self.mode == "analytic" and len(singles) > 1 and workers > 1:
+                with ThreadPoolExecutor(max_workers=workers) as ex:
+                    for i, r in zip(singles, ex.map(lambda i: measure_one(built[i]), singles)):
+                        outs[i] = r
+            else:
+                for i in singles:
+                    outs[i] = measure_one(built[i])
+        return outs

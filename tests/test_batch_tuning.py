@@ -1,0 +1,215 @@
+"""Batch-parallel tuning engine regression tests (no optional deps).
+
+Covers the three contracts the batch refactor must keep:
+* ``VDTuner(q=1)`` reproduces the pre-batch single-point trajectory exactly
+  (a verbatim copy of the seed ``step()`` is the reference implementation),
+* ``q > 1`` proposes q distinct configurations of the polled index type,
+* ``VDMSTuningEnv.evaluate_batch`` returns the same per-config results as
+  sequential ``__call__`` (vectorized same-shape groups included).
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GP, Param, SearchSpace, TuningFailure, VDTuner, cei, ehvi_mc,
+    non_dominated_mask, npi_normalize, qehvi_sequential_greedy,
+)
+from repro.vdms import VDMSTuningEnv, make_space
+
+
+def _toy_objective(cfg):
+    t = cfg["index_type"]
+    k = cfg.get("ka", cfg.get("kb", 0.5))
+    k = k / 8.0 if t == "A" else k
+    sysq = 1.0 - (cfg["s1"] - 0.6) ** 2
+    if t == "A":
+        return {"speed": 80 * (1 - k) * sysq, "recall": 0.5 + 0.45 * k, "mem_gib": 1.0}
+    return {"speed": 50 * (1 - k) * sysq, "recall": 0.6 + 0.39 * k, "mem_gib": 0.5}
+
+
+def _toy_space():
+    return SearchSpace(
+        index_types={
+            "A": [Param("ka", "grid", choices=(1, 2, 4, 8), default=2)],
+            "B": [Param("kb", "float", 0.0, 1.0, default=0.5)],
+        },
+        system_params=[
+            Param("s1", "float", 0.0, 1.0, default=0.5),
+            Param("s2", "cat", choices=(False, True), default=False),
+        ],
+    )
+
+
+def _legacy_step(self):
+    """Verbatim copy of the pre-batch VDTuner.step() (seed commit) used as the
+    reference implementation for the q=1 bit-identity regression test."""
+    t0 = time.perf_counter()
+    Y, types = self.Y, self.types
+    self.abandon.step(Y, types)
+    mode = "balanced" if self.rlim is None else "max"
+    Yn, bases = npi_normalize(Y, types, mode=mode)
+    gp = GP(seed=int(self.rng.integers(2**31)), fit_steps=self.gp_fit_steps)
+    gp.fit(self.X_enc, Yn)
+    t = self._next_poll_type()
+    cands = self._candidates(t)
+    Xc = np.stack([self.space.encode(c) for c in cands])
+    mean, std = gp.predict(Xc)
+    if self.rlim is None:
+        front = Yn[non_dominated_mask(Yn)]
+        ref = np.array([0.5, 0.5])
+        acq = ehvi_mc(mean, std, front, ref, self.rng, self.mc_samples)
+    else:
+        base_t = bases.get(t, np.array([1.0, 1.0]))
+        rlim_n = self.rlim / base_t[1]
+        feas = Y[:, 1] >= self.rlim
+        if feas.any():
+            spd_n = np.array(
+                [o.y[0] / bases[o.index_type][0] for o, f in zip(self.history, feas) if f]
+            )
+            best_feasible = float(spd_n.max())
+        else:
+            best_feasible = float("-inf")
+        acq = cei(mean[:, 0], std[:, 0], mean[:, 1], std[:, 1], best_feasible, rlim_n)
+    cfg = cands[int(np.argmax(acq))]
+    return self._evaluate(cfg, recommend_time=time.perf_counter() - t0)
+
+
+# ---------------------------------------------------------------------------
+# q=1 regression: identical trajectory to the pre-batch tuner
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rlim", [None, 0.85], ids=["ehvi", "cei"])
+def test_q1_trajectory_identical_to_legacy(rlim):
+    ref = VDTuner(_toy_space(), _toy_objective, seed=5, abandon_window=6, rlim=rlim)
+    ref._initial_sampling()
+    for _ in range(8):
+        _legacy_step(ref)
+    new = VDTuner(
+        _toy_space(), _toy_objective, seed=5, abandon_window=6, rlim=rlim, q=1
+    ).run(len(ref.history))
+    assert [o.config for o in new.history] == [o.config for o in ref.history]
+    assert np.array_equal(new.Y, ref.Y)
+
+
+# ---------------------------------------------------------------------------
+# q>1 semantics
+# ---------------------------------------------------------------------------
+def test_batch_step_returns_q_distinct_configs_of_polled_type():
+    tuner = VDTuner(_toy_space(), _toy_objective, seed=1, q=3)
+    tuner._initial_sampling()
+    batch = tuner.step()
+    assert len(batch) == 3
+    assert len({o.index_type for o in batch}) == 1  # one polled type per round
+    assert len({tuple(sorted(o.config.items())) for o in batch}) == 3
+    # recorded in proposal order with contiguous iteration numbers
+    assert [o.iteration for o in batch] == [2, 3, 4]
+
+
+def test_batch_run_respects_iteration_budget():
+    for n in (9, 10, 11):
+        tuner = VDTuner(_toy_space(), _toy_objective, seed=2, q=4).run(n)
+        assert len(tuner.history) == n
+
+
+def test_batch_failures_get_worst_so_far_feedback():
+    calls = {"n": 0}
+
+    def flaky(cfg):
+        calls["n"] += 1
+        if calls["n"] % 4 == 0:
+            raise TuningFailure("boom")
+        return _toy_objective(cfg)
+
+    tuner = VDTuner(_toy_space(), flaky, seed=3, q=3).run(14)
+    failed = [o for o in tuner.history if o.failed]
+    assert failed
+    for o in failed:
+        prior = np.stack([p.y for p in tuner.history[: o.iteration] if not p.failed])
+        assert (o.y <= prior.min(axis=0) + 1e-12).all()
+
+
+def test_qehvi_greedy_spreads_picks():
+    rng = np.random.default_rng(0)
+    X = rng.random((30, 3))
+    Y = np.stack([X[:, 0], 1.0 - X[:, 0] + 0.2 * X[:, 1]], axis=1)
+    gp = GP(seed=0).fit(X, Y)
+    Xc = rng.random((64, 3))
+    front = Y[non_dominated_mask(Y)]
+    idx = qehvi_sequential_greedy(gp, Xc, front, np.zeros(2), rng, q=4)
+    assert len(idx) == 4 and len(set(idx)) == 4
+
+
+# ---------------------------------------------------------------------------
+# GP fantasy conditioning
+# ---------------------------------------------------------------------------
+def test_gp_condition_on_shrinks_uncertainty_and_keeps_original():
+    rng = np.random.default_rng(0)
+    X = rng.random((20, 3))
+    Y = np.stack([X[:, 0] * 2, -X[:, 1]], axis=1)
+    gp = GP(seed=0).fit(X, Y)
+    xq = rng.random((5, 3))
+    mean0, std0 = gp.predict(xq)
+    gp2 = gp.condition_on(xq[:1], mean0[:1])
+    mean1, std1 = gp2.predict(xq)
+    assert (std1[0] < std0[0]).all()  # fantasy collapses uncertainty there
+    assert np.allclose(mean1[0], mean0[0], atol=1e-2)
+    _, std_again = gp.predict(xq)  # original posterior untouched
+    assert np.allclose(std_again, std0)
+
+
+def test_gp_condition_on_grows_past_pad_boundary():
+    rng = np.random.default_rng(1)
+    X = rng.random((32, 2))  # exactly one pad block: forces re-padding
+    Y = X[:, :1] * 3.0
+    gp = GP(seed=0).fit(X, Y)
+    xn = rng.random((3, 2))
+    mean0, std0 = gp.predict(xn)
+    gp2 = gp.condition_on(xn, mean0)  # Kriging-believer fantasies
+    mean1, std1 = gp2.predict(xn)
+    assert mean1.shape == (3, 1) and std1.shape == (3, 1)
+    assert np.allclose(mean1, mean0, atol=0.05)  # fantasy is self-consistent
+    assert (std1 < std0).all()
+
+
+# ---------------------------------------------------------------------------
+# vectorized evaluation pool
+# ---------------------------------------------------------------------------
+def test_evaluate_batch_matches_sequential(small_dataset):
+    space = make_space()
+    base = space.default_config("IVF_FLAT")
+    cfgs = [
+        dict(base),                       # homogeneous same-shape group...
+        dict(base, kmeans_iters=16),      # ...same shapes, different centroids
+        dict(base, nprobe=16),            # different static -> separate program
+        space.default_config("HNSW"),     # heterogeneous leftovers
+        space.default_config("FLAT"),
+        dict(base),                       # in-batch duplicate (deduped)
+    ]
+    env_b = VDMSTuningEnv(small_dataset, mode="analytic", seed=0)
+    out_b = env_b.evaluate_batch(cfgs)
+    env_s = VDMSTuningEnv(small_dataset, mode="analytic", seed=0)
+    out_s = [env_s(c) for c in cfgs]
+    for i, (b, s) in enumerate(zip(out_b, out_s)):
+        assert not isinstance(b, Exception), (i, b)
+        for k in ("speed", "recall", "mem_gib"):
+            assert b[k] == s[k], (i, k)
+    assert env_b.n_evals == env_s.n_evals  # duplicate deduped in both paths
+
+
+def test_evaluate_batch_reports_failures_per_config(small_dataset):
+    space = make_space()
+    env = VDMSTuningEnv(small_dataset, mode="analytic", seed=0, build_timeout=0.0)
+    out = env.evaluate_batch([space.default_config("FLAT"), space.default_config("HNSW")])
+    assert all(isinstance(o, TuningFailure) for o in out)
+
+
+def test_evaluate_batch_serves_cache_hits(small_dataset):
+    space = make_space()
+    env = VDMSTuningEnv(small_dataset, mode="analytic", seed=0)
+    cfg = space.default_config("IVF_FLAT")
+    first = env(cfg)
+    n = env.n_evals
+    again = env.evaluate_batch([cfg, cfg])
+    assert env.n_evals == n
+    assert again[0]["speed"] == first["speed"] == again[1]["speed"]

@@ -2,12 +2,14 @@
 NPI normalization, successive abandon, the full Algorithm-1 loop)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep; pip install -e .[test]")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    GP, Param, SearchSpace, SuccessiveAbandon, VDTuner, RandomLHS, QEHVI,
-    balanced_base, cei, ehvi_mc, ei, hv_2d, hvi_2d, max_base, non_dominated_mask,
-    npi_normalize, pareto_front, scores_by_hv_influence,
+    GP, Param, SearchSpace, SuccessiveAbandon, VDTuner, RandomLHS, balanced_base,
+    cei, ehvi_mc, ei, hv_2d, hvi_2d, non_dominated_mask, npi_normalize,
+    pareto_front, scores_by_hv_influence,
 )
 
 # ---------------------------------------------------------------------------

@@ -6,9 +6,7 @@ import subprocess
 import sys
 import textwrap
 
-import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import ShardingRules, param_axes_for
 from repro.launch import hlo_analysis

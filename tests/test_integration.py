@@ -4,7 +4,6 @@ artifacts; the serve-tuning space has the paper's non-fixed structure."""
 import json
 from pathlib import Path
 
-import numpy as np
 import pytest
 
 from repro.core import VDTuner

@@ -1,16 +1,13 @@
 """Training substrate: loss decreases, checkpoint atomicity/resume/corruption
 recovery, data-pipeline determinism and shard invariance, optimizer math,
 gradient compression, fault-tolerance monitors."""
-import json
 import os
-import shutil
 import signal
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import DataConfig, TokenPipeline

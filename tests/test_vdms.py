@@ -2,9 +2,10 @@
 structural properties the paper's tuning problem depends on."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep; pip install -e .[test]")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.tuner import TuningFailure
 from repro.vdms import (
     VDMSInstance, VDMSTuningEnv, make_dataset, make_space, plan_segments,
     recall_at_k, stack_sealed,
