@@ -1,11 +1,18 @@
 """Paper Fig. 8–10: ablations of the two VDTuner components —
 successive abandon (vs round-robin) and the NPI polling surrogate (vs a
-native GP on raw objectives)."""
+native GP on raw objectives).
+
+All variants are plain ask/tell recommenders driven by the one
+``TuningSession`` harness; the per-variant ``session`` block reports the
+recommend/eval ledger (stable schema)."""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
-from repro.core import VDTuner
+from repro.core import TuningSession, VDTuner
+
 from repro.vdms import make_space
 
 from .common import N_ITERS, RECALL_FLOORS, emit, make_env
@@ -27,7 +34,7 @@ class VDTunerNativeGP(VDTuner):
 
     name = "vdtuner_native"
 
-    def step(self, max_new=None):
+    def ask(self, n: int = 1):
         import repro.core.tuner as tuner_mod
 
         orig = tuner_mod.npi_normalize
@@ -40,7 +47,7 @@ class VDTunerNativeGP(VDTuner):
 
         tuner_mod.npi_normalize = raw_normalize
         try:
-            return super().step(max_new=max_new)
+            return super().ask(n)
         finally:
             tuner_mod.npi_normalize = orig
 
@@ -54,17 +61,17 @@ def run(seed: int = 0, dataset: str = "glove_like"):
         ("round_robin", VDTunerNoAbandon),
         ("native_gp", VDTunerNativeGP),
     ):
-        import time
-
-        t0 = time.perf_counter()
         t = cls(space, env, seed=seed)
-        t.run(N_ITERS)
+        session = TuningSession(t)
+        t0 = time.perf_counter()
+        session.run(N_ITERS)
         wall = time.perf_counter() - t0
         floors = {r: t.best_speed_at_recall(r) for r in RECALL_FLOORS}
         out[name] = {
             "speed_at_floor": floors,
             "abandoned": list(getattr(t.abandon, "abandoned", [])),
             "score_log_len": len(t.abandon.score_log),
+            "session": session.ledger_dict(),
         }
         emit(
             f"ablation/{dataset}/{name}", wall * 1e6 / N_ITERS,

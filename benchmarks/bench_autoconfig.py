@@ -27,7 +27,7 @@ def run(seed: int = 0):
         env = make_env(ds, seed=seed)
         default = env(space.default_config("AUTOINDEX"))
         default_y = np.array([default["speed"], default["recall"]])
-        tuner, wall = run_method("vdtuner", env, space, N_ITERS, seed=seed)
+        tuner, wall, _session = run_method("vdtuner", env, space, N_ITERS, seed=seed)
         spd_imp, rec_imp = best_without_sacrifice(tuner, default_y)
         best = max(
             (o for o in tuner.history if not o.failed),

@@ -5,6 +5,11 @@ Also exposes the batch-parallel tuning axis: ``--batch-sizes 1 4`` runs the
 same VDTuner iteration budget at each ``q`` and reports wall-clock tuning
 time vs. batch size (``--check-speedup`` turns a q>1 regression into a
 non-zero exit for CI smoke-bench gating).
+
+Every tuner is driven through ``TuningSession`` — one harness for all
+methods — and the ``--json`` output carries a ``session`` block per run: the
+per-iteration recommend/eval time ledger with a stable schema
+(``repro.core.session.LEDGER_SCHEMA``).
 """
 from __future__ import annotations
 
@@ -15,7 +20,7 @@ import time
 
 import numpy as np
 
-from repro.core import VDTuner, hv_2d, pareto_front
+from repro.core import TuningSession, VDTuner, hv_2d, pareto_front
 from repro.vdms import make_space
 
 from .common import DATASETS, N_ITERS, RECALL_FLOORS, emit, make_env, run_method
@@ -42,11 +47,12 @@ def run(seed: int = 0, datasets=DATASETS):
     out = {}
     for ds in datasets:
         env = make_env(ds, seed=seed)
-        results, walls = {}, {}
+        results, walls, ledgers = {}, {}, {}
         for m in METHODS:
-            tuner, wall = run_method(m, env, space, N_ITERS, seed=seed)
+            tuner, wall, session = run_method(m, env, space, N_ITERS, seed=seed)
             results[m] = tuner
             walls[m] = wall
+            ledgers[m] = session.ledger_dict()
         table = {m: speed_at_floors(t) for m, t in results.items()}
         # tuning efficiency (Fig. 7): iterations for vdtuner to match the most
         # competitive baseline at each floor
@@ -62,7 +68,8 @@ def run(seed: int = 0, datasets=DATASETS):
             m: float(np.nanstd([table[m][r] for r in RECALL_FLOORS])) for m in METHODS
         }
         out[ds] = {"speed_at_floor": table, "iters_to_match_best_baseline": eff,
-                   "tradeoff_std": tradeoff, "wall_s": walls}
+                   "tradeoff_std": tradeoff, "wall_s": walls,
+                   "session": ledgers}
         for m in METHODS:
             vals = ";".join(
                 f"r{r}={table[m][r]:.0f}" if np.isfinite(table[m][r]) else f"r{r}=nan"
@@ -90,8 +97,10 @@ def run_batched(
     out = {}
     for q in batch_sizes:
         env = make_env(dataset, seed=seed, mode=mode)
+        tuner = VDTuner(space, env, seed=seed, q=int(q))
+        session = TuningSession(tuner)
         t0 = time.perf_counter()
-        tuner = VDTuner(space, env, seed=seed, q=int(q)).run(n_iters)
+        session.run(n_iters)
         wall = time.perf_counter() - t0
         ys = tuner.Y
         norm = ys.max(axis=0)
@@ -105,6 +114,7 @@ def run_batched(
             "replay_s": float(env.total_replay_time),
             "n_evals": int(env.n_evals),
             "hv_norm": float(hv),
+            "session": session.ledger_dict(),
         }
         emit(f"efficiency_batched/{dataset}/q{q}", wall * 1e6 / n_iters,
              f"wall={wall:.2f}s;hv={hv:.3f}")

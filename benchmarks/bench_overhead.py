@@ -15,12 +15,13 @@ def run(seed: int = 0, dataset: str = "glove_like"):
     out = {}
     for m in METHODS:
         env = make_env(dataset, seed=seed)
-        tuner, wall = run_method(m, env, space, N_ITERS, seed=seed)
+        tuner, wall, session = run_method(m, env, space, N_ITERS, seed=seed)
         rec = sum(o.recommend_time for o in tuner.history)
         replay = sum(o.eval_time for o in tuner.history)
         out[m] = {
             "recommend_s": rec, "replay_s": replay, "total_s": wall,
             "recommend_pct": 100 * rec / max(wall, 1e-9),
+            "session": session.ledger_dict(),
         }
         emit(f"overhead/{m}", wall * 1e6 / N_ITERS,
              f"rec={rec:.1f}s({100*rec/max(wall,1e-9):.2f}%);replay={replay:.1f}s")

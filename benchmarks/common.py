@@ -8,7 +8,8 @@ from typing import Optional
 import numpy as np
 
 from repro.core import (
-    DefaultOnly, OpenTunerLike, OtterTuneLike, QEHVI, RandomLHS, VDTuner, hv_2d, pareto_front,
+    DefaultOnly, OpenTunerLike, OtterTuneLike, QEHVI, RandomLHS, TuningSession, VDTuner,
+    hv_2d, pareto_front,
 )
 from repro.vdms import VDMSTuningEnv, make_dataset
 
@@ -31,16 +32,22 @@ def make_env(dataset: str, seed: int = 0, mode: Optional[str] = None,
     return VDMSTuningEnv(ds, mode=mode or MODE, seed=seed)
 
 
-def run_method(name: str, env, space, n_iters: int, seed: int = 0, **kw):
+def run_method(name: str, env, space, n_iters: int, seed: int = 0, executor=None, **kw):
+    """Drive any tuner through the one ``TuningSession`` harness.
+
+    Returns ``(tuner, wall_s, session)`` — the session carries the
+    per-iteration recommend/eval ledger (``session.ledger_dict()``).
+    """
     cls = {
         "vdtuner": VDTuner, "default": DefaultOnly, "random_lhs": RandomLHS,
         "ottertune": OtterTuneLike, "qehvi": QEHVI, "opentuner": OpenTunerLike,
     }[name]
     t0 = time.perf_counter()
     tuner = cls(space, env, seed=seed, **kw)
-    tuner.run(n_iters)
+    session = TuningSession(tuner, executor=executor)
+    session.run(n_iters)
     wall = time.perf_counter() - t0
-    return tuner, wall
+    return tuner, wall, session
 
 
 def norm_hv(tuner, ymax) -> float:

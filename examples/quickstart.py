@@ -1,17 +1,34 @@
 """Quickstart: auto-tune a vector data management system with VDTuner.
 
 Builds a small JAX-native VDMS over a synthetic angular-embedding dataset,
-then runs VDTuner's polling multi-objective Bayesian optimization to find
-configurations that maximize BOTH search speed (QPS) and recall@10.
+then drives VDTuner's polling multi-objective Bayesian optimization through
+the ask/tell `TuningSession` API to find configurations that maximize BOTH
+search speed (QPS) and recall@10 — and shows that a killed session resumes
+bit-identically from a JSON checkpoint.
 
     PYTHONPATH=src python examples/quickstart.py
-"""
 
-from repro.core import VDTuner, pareto_front
+Exits non-zero if the checkpoint/resume round-trip diverges (CI runs this
+file as the public-API smoke test).
+"""
+import json
+import sys
+
+from repro.core import StopSession, TuningSession, VDTuner, pareto_front, speed_recall
 from repro.vdms import VDMSTuningEnv, make_dataset, make_space
 
+N_ITERS = 30
 
-def main():
+
+def make_tuner(space):
+    # the tuner is a pure recommender: ask(n) -> configs, tell(cfg, result).
+    # objective_spec picks WHAT to maximize (see repro.core.objectives —
+    # speed_recall, recall_floor(0.9), cost_aware(eta));
+    # the session owns evaluation dispatch, budget, ledger, checkpoints.
+    return VDTuner(space, seed=0, abandon_window=8, objective_spec=speed_recall())
+
+
+def main() -> int:
     print("== building dataset + environment ==")
     ds = make_dataset("glove_like", n=6144, n_queries=128, k=10, seed=0)
     env = VDMSTuningEnv(ds, mode="analytic", seed=0)  # mode="wall" for real QPS
@@ -21,11 +38,17 @@ def main():
     default = env(space.default_config("AUTOINDEX"))
     print(f"   AUTOINDEX default: qps={default['speed']:.0f} recall={default['recall']:.3f}")
 
-    print("== VDTuner: 30 iterations of polling MOBO ==")
-    tuner = VDTuner(space, env, seed=0, abandon_window=8)
-    tuner.run(30)
+    print(f"== VDTuner: {N_ITERS} iterations of polling MOBO via TuningSession ==")
+    tuner = make_tuner(space)
+    session = TuningSession(tuner, backend=env)
+    session.run(N_ITERS)
+    # (deprecated one-liner, same trajectory: VDTuner(space, env, seed=0,
+    #  abandon_window=8).run(30) — kept as a thin shim over TuningSession.)
 
+    ledger = session.ledger_dict()["totals"]
     print(f"   abandoned index types: {tuner.abandon.abandoned}")
+    print(f"   time ledger: recommend={ledger['recommend_s']:.2f}s "
+          f"eval={ledger['eval_s']:.2f}s over {ledger['n_rounds']} rounds")
     print("   Pareto front (speed, recall):")
     for spd, rec in pareto_front(tuner.Y):
         print(f"     qps={spd:9.0f}  recall={rec:.3f}")
@@ -41,6 +64,32 @@ def main():
               f"(+{gain:.0f}% qps, recall {best.y[1]:.3f})")
         print(f"   config: { {k: v for k, v in best.config.items() if k != 'index_type'} }")
 
+    # -- checkpoint/resume: kill the session mid-run, restore, continue -----
+    print("== checkpoint/resume: interrupt at 12 observations, restore, rerun ==")
+
+    def interrupt(sess, obs):
+        if sess.n_observations >= 12:
+            raise StopSession
+
+    part = TuningSession(make_tuner(space), backend=env, callbacks=[interrupt])
+    part.run(N_ITERS)
+    checkpoint = json.dumps(part.state_dict())  # JSON all the way to disk
+    print(f"   checkpoint after {part.n_observations} observations "
+          f"({len(checkpoint)} bytes of JSON)")
+
+    resumed = TuningSession.restore(json.loads(checkpoint), make_tuner(space), backend=env)
+    resumed.run(N_ITERS)
+
+    want = [(o.config, tuple(o.y), o.failed) for o in tuner.history]
+    got = [(o.config, tuple(o.y), o.failed) for o in resumed.tuner.history]
+    if got != want:
+        print("   RESUME MISMATCH: restored session diverged from the "
+              "uninterrupted run", file=sys.stderr)
+        return 1
+    print(f"   resumed run is bit-identical to the uninterrupted one "
+          f"({len(got)} observations)")
+    return 0
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

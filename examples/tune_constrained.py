@@ -2,9 +2,13 @@
 bootstrap a second tuning session (tighter recall floor) from the first
 session's data (paper §IV-F).
 
+The recall floor is expressed as a first-class objective
+(`repro.core.objectives.recall_floor`): the spec carries the constraint and
+VDTuner switches to constrained EI automatically.
+
     PYTHONPATH=src python examples/tune_constrained.py
 """
-from repro.core import VDTuner
+from repro.core import TuningSession, VDTuner, recall_floor
 from repro.vdms import VDMSTuningEnv, make_dataset, make_space
 
 
@@ -14,11 +18,15 @@ def main():
     space = make_space()
 
     print("== phase 1: recall >= 0.85 (constraint EI) ==")
-    t1 = VDTuner(space, env, seed=1, rlim=0.85).run(25)
+    t1 = VDTuner(space, seed=1, objective_spec=recall_floor(0.85))
+    TuningSession(t1, backend=env).run(25)
     print(f"   best qps @ recall>=0.85: {t1.best_speed_at_recall(0.85):.0f}")
 
     print("== phase 2: recall >= 0.92, bootstrapped from phase 1 ==")
-    t2 = VDTuner(space, env, seed=2, rlim=0.92, bootstrap_history=t1.history).run(20)
+    t2 = VDTuner(
+        space, seed=2, objective_spec=recall_floor(0.92), bootstrap_history=t1.history
+    )
+    TuningSession(t2, backend=env).run(20)
     print(f"   best qps @ recall>=0.92: {t2.best_speed_at_recall(0.92):.0f}")
 
     feas = sum(1 for o in t2.history if not o.bootstrap and o.y[1] >= 0.92)

@@ -1,18 +1,48 @@
-"""VDTuner core: multi-objective Bayesian optimization for system tuning."""
+"""VDTuner core: multi-objective Bayesian optimization for system tuning.
+
+The public tuning API is the ask/tell trio: an ask/tell recommender
+(``VDTuner`` or a baseline), an ``ObjectiveSpec`` (what to maximize), and a
+``TuningSession`` (who drives recommendation, evaluation dispatch, ledger,
+checkpoints). See README "Tuning API".
+"""
 from .acquisition import cei, ehvi_mc, ei, greedy_select, qehvi_sequential_greedy
 from .baselines import ALL_BASELINES, DefaultOnly, OpenTunerLike, OtterTuneLike, QEHVI, RandomLHS
 from .budget import SuccessiveAbandon, scores_by_hv_influence
 from .gp import GP
 from .hypervolume import hv_2d, hvi_2d
 from .normalize import balanced_base, max_base, npi_normalize
+from .objectives import (
+    OBJECTIVES,
+    EvalBackend,
+    ObjectiveSpec,
+    SequentialBatchMixin,
+    as_eval_backend,
+    cost_aware,
+    cost_aware_transform,
+    default_transform,
+    recall_floor,
+    speed_recall,
+)
 from .pareto import non_dominated_mask, pareto_front
+from .session import (
+    BatchExecutor,
+    SequentialExecutor,
+    StopSession,
+    ThreadedExecutor,
+    TuningSession,
+    checkpoint_every,
+)
 from .space import Config, Param, SearchSpace
-from .tuner import Observation, TunerBase, TuningFailure, VDTuner, cost_aware_transform
+from .tuner import Observation, TunerBase, TuningFailure, VDTuner
 
 __all__ = [
-    "ALL_BASELINES", "Config", "DefaultOnly", "GP", "Observation", "OpenTunerLike",
-    "OtterTuneLike", "Param", "QEHVI", "RandomLHS", "SearchSpace", "SuccessiveAbandon",
-    "TunerBase", "TuningFailure", "VDTuner", "balanced_base", "cei", "cost_aware_transform",
-    "ehvi_mc", "ei", "greedy_select", "hv_2d", "hvi_2d", "max_base", "non_dominated_mask",
-    "npi_normalize", "pareto_front", "qehvi_sequential_greedy", "scores_by_hv_influence",
+    "ALL_BASELINES", "BatchExecutor", "Config", "DefaultOnly", "EvalBackend", "GP",
+    "OBJECTIVES", "ObjectiveSpec", "Observation", "OpenTunerLike", "OtterTuneLike",
+    "Param", "QEHVI", "RandomLHS", "SearchSpace", "SequentialBatchMixin",
+    "SequentialExecutor", "StopSession", "SuccessiveAbandon", "ThreadedExecutor",
+    "TunerBase", "TuningFailure", "TuningSession", "VDTuner", "as_eval_backend",
+    "balanced_base", "cei", "checkpoint_every", "cost_aware", "cost_aware_transform",
+    "default_transform", "ehvi_mc", "ei", "greedy_select", "hv_2d", "hvi_2d",
+    "max_base", "non_dominated_mask", "npi_normalize", "pareto_front",
+    "qehvi_sequential_greedy", "recall_floor", "scores_by_hv_influence", "speed_recall",
 ]

@@ -11,11 +11,16 @@
 * OpenTunerLike— AUC-bandit meta-search over numerical techniques (random,
                  annealing-style perturbation, crossover) on the weighted-sum
                  reward [20].
+
+All baselines speak the same ask/tell protocol as ``VDTuner`` and are driven
+by ``TuningSession`` — one harness for every tuner, so paper comparisons
+(Fig. 6–7, Table VI) measure the recommenders, not five different loops.
+The observation sequences are bit-identical to the pre-redesign per-tuner
+``run()`` loops (regression-tested in ``tests/test_session.py``).
 """
 from __future__ import annotations
 
-import time
-from typing import List
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -23,30 +28,27 @@ from .acquisition import ehvi_mc, ei
 from .gp import GP
 from .pareto import non_dominated_mask
 from .space import Config
-from .tuner import TunerBase
+from .tuner import Observation, TunerBase
 
 
 class DefaultOnly(TunerBase):
     name = "default"
 
-    def run(self, n_iters: int) -> "DefaultOnly":
-        for t in self.space.type_names:
-            if len(self.history) >= n_iters:
-                break
-            self._evaluate(self.space.default_config(t), recommend_time=0.0)
-        return self
+    def ask(self, n: int = 1) -> List[Config]:
+        # one default per index type, in declaration order, up to the budget;
+        # exhausted (empty ask) once every type has been tried.
+        done = len(self.history)
+        todo = self.space.type_names[done : done + max(n, 0)]
+        return [self.space.default_config(t) for t in todo]
 
 
 class RandomLHS(TunerBase):
     name = "random_lhs"
 
-    def run(self, n_iters: int) -> "RandomLHS":
-        t0 = time.perf_counter()
-        cfgs = self.space.lhs(self.rng, n_iters)
-        rec = time.perf_counter() - t0
-        for c in cfgs:
-            self._evaluate(c, recommend_time=rec / max(n_iters, 1))
-        return self
+    def ask(self, n: int = 1) -> List[Config]:
+        # the whole remaining budget is one LHS plan, so the stratification
+        # covers it exactly like the legacy single-shot design.
+        return self.space.lhs(self.rng, max(n, 1))
 
 
 def _weighted_sum(Y: np.ndarray, w: float = 0.5) -> np.ndarray:
@@ -65,22 +67,18 @@ class OtterTuneLike(TunerBase):
         self.n_init = n_init
         self.n_candidates = n_candidates
 
-    def run(self, n_iters: int) -> "OtterTuneLike":
-        for c in self.space.lhs(self.rng, min(self.n_init, n_iters)):
-            self._evaluate(c, recommend_time=0.0)
-        while len(self.history) < n_iters:
-            t0 = time.perf_counter()
-            Y = self.Y
-            scal = _weighted_sum(Y)
-            gp = GP(seed=int(self.rng.integers(2**31)))
-            gp.fit(self.X_enc, scal[:, None])
-            cands = self.space.sample(self.rng, self.n_candidates)
-            Xc = np.stack([self.space.encode(c) for c in cands])
-            mean, std = gp.predict(Xc)
-            acq = ei(mean[:, 0], std[:, 0], float(scal.max()))
-            cfg = cands[int(np.argmax(acq))]
-            self._evaluate(cfg, recommend_time=time.perf_counter() - t0)
-        return self
+    def ask(self, n: int = 1) -> List[Config]:
+        if not self.history:
+            return self.space.lhs(self.rng, min(self.n_init, max(n, 1)))
+        Y = self.Y
+        scal = _weighted_sum(Y)
+        gp = GP(seed=int(self.rng.integers(2**31)))
+        gp.fit(self.X_enc, scal[:, None])
+        cands = self.space.sample(self.rng, self.n_candidates)
+        Xc = np.stack([self.space.encode(c) for c in cands])
+        mean, std = gp.predict(Xc)
+        acq = ei(mean[:, 0], std[:, 0], float(scal.max()))
+        return [cands[int(np.argmax(acq))]]
 
 
 class QEHVI(TunerBase):
@@ -92,23 +90,19 @@ class QEHVI(TunerBase):
         self.n_candidates = n_candidates
         self.mc_samples = mc_samples
 
-    def run(self, n_iters: int) -> "QEHVI":
-        for c in self.space.lhs(self.rng, min(self.n_init, n_iters)):
-            self._evaluate(c, recommend_time=0.0)
-        while len(self.history) < n_iters:
-            t0 = time.perf_counter()
-            Y = self.Y
-            gp = GP(seed=int(self.rng.integers(2**31)))
-            gp.fit(self.X_enc, Y)
-            cands = self.space.sample(self.rng, self.n_candidates)
-            Xc = np.stack([self.space.encode(c) for c in cands])
-            mean, std = gp.predict(Xc)
-            front = Y[non_dominated_mask(Y)]
-            ref = np.zeros(2)  # paper: qEHVI reference point set to 0
-            acq = ehvi_mc(mean, std, front, ref, self.rng, self.mc_samples)
-            cfg = cands[int(np.argmax(acq))]
-            self._evaluate(cfg, recommend_time=time.perf_counter() - t0)
-        return self
+    def ask(self, n: int = 1) -> List[Config]:
+        if not self.history:
+            return self.space.lhs(self.rng, min(self.n_init, max(n, 1)))
+        Y = self.Y
+        gp = GP(seed=int(self.rng.integers(2**31)))
+        gp.fit(self.X_enc, Y)
+        cands = self.space.sample(self.rng, self.n_candidates)
+        Xc = np.stack([self.space.encode(c) for c in cands])
+        mean, std = gp.predict(Xc)
+        front = Y[non_dominated_mask(Y)]
+        ref = np.zeros(2)  # paper: qEHVI reference point set to 0
+        acq = ehvi_mc(mean, std, front, ref, self.rng, self.mc_samples)
+        return [cands[int(np.argmax(acq))]]
 
 
 class OpenTunerLike(TunerBase):
@@ -124,6 +118,8 @@ class OpenTunerLike(TunerBase):
         self._uses: List[str] = []
         self._credits: List[float] = []
         self._temp = 0.5
+        # (technique, pre-eval best scalarization) for the in-flight proposal
+        self._pending_credit: Optional[Tuple[str, float]] = None
 
     def _pick_technique(self) -> str:
         # AUC-credit bandit: exploitation score per technique from recent
@@ -161,18 +157,36 @@ class OpenTunerLike(TunerBase):
             return self.space.decode(np.where(mask, xa, xb), index_type=good["index_type"])
         raise ValueError(tech)
 
-    def run(self, n_iters: int) -> "OpenTunerLike":
-        while len(self.history) < n_iters:
-            t0 = time.perf_counter()
-            tech = self._pick_technique()
-            cfg = self._propose(tech)
-            rec = time.perf_counter() - t0
-            before = _weighted_sum(self.Y).max() if self.history else -np.inf
-            obs = self._evaluate(cfg, recommend_time=rec)
-            after = _weighted_sum(self.Y).max()
-            self._uses.append(tech)
-            self._credits.append(1.0 if after > before else 0.0)
-        return self
+    def ask(self, n: int = 1) -> List[Config]:
+        tech = self._pick_technique()
+        cfg = self._propose(tech)
+        before = _weighted_sum(self.Y).max() if self.history else -np.inf
+        self._pending_credit = (tech, float(before))
+        return [cfg]
+
+    def _on_tell(self, obs: Observation) -> None:
+        if self._pending_credit is None:
+            return
+        tech, before = self._pending_credit
+        self._pending_credit = None
+        after = float(_weighted_sum(self.Y).max())
+        self._uses.append(tech)
+        self._credits.append(1.0 if after > before else 0.0)
+
+    def _extra_state(self) -> Dict[str, Any]:
+        return {
+            "uses": list(self._uses),
+            "credits": [float(c) for c in self._credits],
+            "temp": float(self._temp),
+            "pending_credit": list(self._pending_credit) if self._pending_credit else None,
+        }
+
+    def _load_extra_state(self, extra: Dict[str, Any]) -> None:
+        self._uses = list(extra["uses"])
+        self._credits = [float(c) for c in extra["credits"]]
+        self._temp = float(extra["temp"])
+        pc = extra.get("pending_credit")
+        self._pending_credit = (str(pc[0]), float(pc[1])) if pc else None
 
 
 ALL_BASELINES = {

@@ -3,7 +3,7 @@
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -55,6 +55,22 @@ class SuccessiveAbandon:
         self._worst_history: List[str] = []
         self.abandoned: List[str] = []
         self.score_log: List[Dict[str, float]] = []
+
+    # --- checkpointing (JSON-compatible) --------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "remaining": list(self.remaining),
+            "worst_history": list(self._worst_history),
+            "abandoned": list(self.abandoned),
+            "score_log": [dict(s) for s in self.score_log],
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> "SuccessiveAbandon":
+        self.remaining = list(state["remaining"])
+        self._worst_history = list(state["worst_history"])
+        self.abandoned = list(state["abandoned"])
+        self.score_log = [{k: float(v) for k, v in s.items()} for s in state["score_log"]]
+        return self
 
     def step(self, Y: np.ndarray, types: np.ndarray) -> Optional[str]:
         """Score remaining types on the observations so far; abandon and return

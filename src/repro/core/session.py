@@ -1,0 +1,355 @@
+"""`TuningSession`: one driver for every tuner.
+
+The session owns everything the ask/tell recommenders do not: evaluation
+dispatch (sequential, vectorized ``evaluate_batch``, or a pluggable
+executor), the worst-value failure feedback path, stop conditions, the
+recommend/eval time ledger, callbacks, and serializable checkpoints.
+
+Lifecycle::
+
+        ┌──────────────── TuningSession.run(n) ────────────────┐
+        │                                                      │
+        │   cfgs = tuner.ask(remaining)      # pure recommender │
+        │   results = executor(backend, cfgs)  # EvalBackend    │
+        │   for cfg, result in zip(cfgs, results):              │
+        │       tuner.tell(cfg, result)      # + ledger, cbs    │
+        │                                                      │
+        └── until budget met / tuner exhausted / StopSession ──┘
+
+Checkpointing: ``session.state_dict()`` captures the tuner state (history,
+RNG, polling/abandon state, §IV-F bootstrap observations) plus the session's
+own in-flight state — configurations that were asked but not yet told — as a
+JSON-compatible dict. ``TuningSession.restore(state, tuner)`` resumes
+bit-identically: the pending queue is re-evaluated first (deterministic
+backends, e.g. the cached ``VDMSTuningEnv``, reproduce the same results),
+then recommendation continues from the exact saved RNG state.
+"""
+from __future__ import annotations
+
+import copy
+import os
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+from .objectives import EvalBackend, TuningFailure
+from .space import Config
+from .tuner import Observation, TunerBase
+
+STATE_VERSION = 1
+LEDGER_SCHEMA = 1
+
+Callback = Callable[["TuningSession", Observation], None]
+
+
+class StopSession(Exception):
+    """Raised from a callback (or executor) to stop the session cleanly.
+
+    The session stays consistent: every already-told observation is kept and
+    the not-yet-told remainder of the current round survives in the pending
+    queue, so ``state_dict()`` right after the stop checkpoints mid-round.
+    """
+
+
+# ---------------------------------------------------------------------------
+# Evaluation executors
+# ---------------------------------------------------------------------------
+class SequentialExecutor:
+    """Evaluate one config at a time through ``backend(cfg)`` — results are
+    yielded as they land, so observations are told (and checkpointable)
+    between evaluations."""
+
+    name = "sequential"
+
+    def execute(self, backend: EvalBackend, cfgs: Sequence[Config]) -> Iterator[Tuple[Any, float]]:
+        for cfg in cfgs:
+            t0 = time.perf_counter()
+            try:
+                result: Any = backend(cfg)
+            except TuningFailure as e:
+                result = e
+            yield result, time.perf_counter() - t0
+
+
+class BatchExecutor:
+    """Vectorized dispatch through the backend's ``evaluate_batch``.
+
+    Mirrors the pre-redesign batch path exactly: single-config rounds and
+    backends without ``evaluate_batch`` fall back to sequential evaluation;
+    batch eval time is amortized per config.
+    """
+
+    name = "batch"
+
+    def execute(self, backend: EvalBackend, cfgs: Sequence[Config]) -> Iterator[Tuple[Any, float]]:
+        eb = getattr(backend, "evaluate_batch", None)
+        if eb is None or len(cfgs) == 1:
+            yield from SequentialExecutor().execute(backend, cfgs)
+            return
+        t0 = time.perf_counter()
+        results = eb(list(cfgs))
+        per_cfg = (time.perf_counter() - t0) / max(len(cfgs), 1)
+        for result in results:
+            yield result, per_cfg
+
+
+class ThreadedExecutor:
+    """Concurrent per-config evaluation in a thread pool, yielded in config
+    order — for backends whose evaluations are independent and release the
+    GIL (network-attached VDMS replicas, subprocess benchmarks)."""
+
+    name = "threaded"
+
+    def __init__(self, max_workers: Optional[int] = None):
+        self.max_workers = max_workers
+
+    def execute(self, backend: EvalBackend, cfgs: Sequence[Config]) -> Iterator[Tuple[Any, float]]:
+        def one(cfg: Config) -> Tuple[Any, float]:
+            t0 = time.perf_counter()
+            try:
+                result: Any = backend(cfg)
+            except TuningFailure as e:
+                result = e
+            return result, time.perf_counter() - t0
+
+        workers = self.max_workers or min(max(len(cfgs), 1), os.cpu_count() or 4)
+        if len(cfgs) <= 1 or workers == 1:
+            yield from (one(c) for c in cfgs)
+            return
+        with ThreadPoolExecutor(max_workers=workers) as ex:
+            yield from ex.map(one, cfgs)
+
+
+_EXECUTORS = {
+    "sequential": SequentialExecutor,
+    "batch": BatchExecutor,
+    "auto": BatchExecutor,  # batch when available, sequential otherwise
+    "threaded": ThreadedExecutor,
+}
+
+ExecutorLike = Union[str, None, SequentialExecutor, BatchExecutor, ThreadedExecutor, Any]
+
+
+def resolve_executor(executor: ExecutorLike, tuner: TunerBase):
+    if executor is None:
+        executor = tuner.preferred_executor()
+    if isinstance(executor, str):
+        try:
+            return _EXECUTORS[executor]()
+        except KeyError:
+            raise ValueError(
+                f"unknown executor {executor!r}; choose from {sorted(_EXECUTORS)} "
+                "or pass an object with .execute(backend, cfgs)"
+            ) from None
+    if not hasattr(executor, "execute"):
+        raise TypeError(f"executor must expose .execute(backend, cfgs), got {executor!r}")
+    return executor
+
+
+# ---------------------------------------------------------------------------
+# The session
+# ---------------------------------------------------------------------------
+class TuningSession:
+    """Drives one tuner against one evaluation backend.
+
+    Parameters
+    ----------
+    tuner:
+        Any ask/tell recommender (``VDTuner`` or a baseline).
+    backend:
+        The evaluation service (``EvalBackend``). Defaults to the tuner's
+        own ``objective`` for the legacy construction style.
+    executor:
+        ``"sequential"`` | ``"batch"`` | ``"auto"`` | ``"threaded"``, an
+        object with ``.execute(backend, cfgs)``, or ``None`` to use the
+        tuner's ``preferred_executor()`` (which reproduces pre-redesign
+        dispatch exactly).
+    callbacks:
+        Callables ``cb(session, observation)`` invoked after every told
+        observation — checkpoint hooks, progress bars, early stopping (raise
+        :class:`StopSession`).
+    """
+
+    def __init__(
+        self,
+        tuner: TunerBase,
+        backend: Optional[EvalBackend] = None,
+        executor: ExecutorLike = None,
+        callbacks: Sequence[Callback] = (),
+    ):
+        self.tuner = tuner
+        self.backend = backend if backend is not None else tuner.objective
+        if self.backend is None:
+            raise ValueError("no evaluation backend: pass backend= or construct the tuner with an objective")
+        self.executor = resolve_executor(executor, tuner)
+        self.callbacks: List[Callback] = list(callbacks)
+        self.rounds: List[Dict[str, Any]] = []
+        self._pending: List[Config] = []
+        self._pending_recommend_s = 0.0
+
+    # ------------------------------------------------------------------
+    # progress views
+    # ------------------------------------------------------------------
+    @property
+    def history(self) -> List[Observation]:
+        return self.tuner.history
+
+    @property
+    def n_observations(self) -> int:
+        """Fresh (non-bootstrap) observations — the budget currency."""
+        return sum(1 for o in self.tuner.history if not o.bootstrap)
+
+    @property
+    def pending(self) -> List[Config]:
+        """Asked-but-not-yet-told configurations (read-only copy)."""
+        return [dict(c) for c in self._pending]
+
+    # ------------------------------------------------------------------
+    # the loop
+    # ------------------------------------------------------------------
+    def run(
+        self,
+        n_iters: int,
+        max_wall_s: Optional[float] = None,
+        stop: Optional[Callable[["TuningSession"], bool]] = None,
+    ) -> "TuningSession":
+        """Run until ``n_iters`` fresh observations (counting any restored
+        ones), the wall-clock budget, a ``stop`` predicate, tuner exhaustion
+        (empty ask), or a :class:`StopSession` from a callback.
+
+        A round already in flight is always drained before stop conditions
+        are re-checked, so a mandatory warm-up batch may overshoot the budget
+        — exactly like the pre-redesign tuner loops.
+        """
+        t_start = time.perf_counter()
+        try:
+            while True:
+                if self._pending:
+                    self._drain()
+                    continue
+                if self.n_observations >= n_iters:
+                    break
+                if max_wall_s is not None and time.perf_counter() - t_start >= max_wall_s:
+                    break
+                if stop is not None and stop(self):
+                    break
+                t0 = time.perf_counter()
+                cfgs = list(self.tuner.ask(n_iters - self.n_observations))
+                ask_s = time.perf_counter() - t0
+                if not cfgs:
+                    break  # recommender exhausted (e.g. DefaultOnly)
+                self._pending = cfgs
+                self._pending_recommend_s = ask_s / len(cfgs)
+                self.rounds.append(
+                    {"round": len(self.rounds), "n_asked": len(cfgs), "ask_s": ask_s, "evals": []}
+                )
+        except StopSession:
+            pass
+        return self
+
+    def _drain(self) -> None:
+        """Evaluate the pending queue, telling each result as it lands.
+
+        ``_pending`` is popped before callbacks fire, so a checkpoint taken
+        from a callback (or after a :class:`StopSession`) holds exactly the
+        not-yet-told remainder.
+        """
+        cfgs = list(self._pending)
+        for result, eval_s in self.executor.execute(self.backend, cfgs):
+            cfg = self._pending[0]
+            obs = self.tuner.tell(
+                cfg, result, recommend_time=self._pending_recommend_s, eval_time=eval_s
+            )
+            self._pending.pop(0)
+            self._ledger_obs(obs, eval_s)
+            for cb in self.callbacks:
+                cb(self, obs)
+
+    def _ledger_obs(self, obs: Observation, eval_s: float) -> None:
+        if not self.rounds:  # restored mid-round: ledger continues in a fresh row
+            self.rounds.append({"round": 0, "n_asked": 0, "ask_s": 0.0, "evals": []})
+        self.rounds[-1]["evals"].append(
+            {
+                "iteration": int(obs.iteration),
+                "recommend_s": float(obs.recommend_time),
+                "eval_s": float(eval_s),
+                "failed": bool(obs.failed),
+            }
+        )
+
+    # ------------------------------------------------------------------
+    # ledger
+    # ------------------------------------------------------------------
+    def ledger_dict(self) -> Dict[str, Any]:
+        """The recommend/eval time ledger with a stable schema (BENCH json
+        ``session`` block)."""
+        evals = [e for r in self.rounds for e in r["evals"]]
+        return {
+            "schema": LEDGER_SCHEMA,
+            "tuner": self.tuner.name,
+            "executor": getattr(self.executor, "name", type(self.executor).__name__),
+            "rounds": copy.deepcopy(self.rounds),
+            "totals": {
+                "n_rounds": len(self.rounds),
+                "n_evals": len(evals),
+                "n_failures": sum(1 for e in evals if e["failed"]),
+                "ask_s": float(sum(r["ask_s"] for r in self.rounds)),
+                "recommend_s": float(sum(e["recommend_s"] for e in evals)),
+                "eval_s": float(sum(e["eval_s"] for e in evals)),
+            },
+        }
+
+    # ------------------------------------------------------------------
+    # checkpointing
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-compatible checkpoint: tuner state + in-flight session state."""
+        return {
+            "version": STATE_VERSION,
+            "tuner": self.tuner.state_dict(),
+            "pending": [dict(c) for c in self._pending],
+            "pending_recommend_s": float(self._pending_recommend_s),
+            "rounds": copy.deepcopy(self.rounds),
+        }
+
+    @classmethod
+    def restore(
+        cls,
+        state: Dict[str, Any],
+        tuner: TunerBase,
+        backend: Optional[EvalBackend] = None,
+        executor: ExecutorLike = None,
+        callbacks: Sequence[Callback] = (),
+    ) -> "TuningSession":
+        """Rebuild a session from ``state_dict()`` output.
+
+        ``tuner`` must be freshly constructed with the same constructor
+        arguments as the checkpointed one (its mutable state — history, RNG,
+        polling/abandon, bootstrap observations — is overwritten from the
+        checkpoint). The continuation is bit-identical to an uninterrupted
+        run for deterministic backends.
+        """
+        version = state.get("version")
+        if version != STATE_VERSION:
+            raise ValueError(f"unsupported session state version {version!r}")
+        tuner.load_state_dict(state["tuner"])
+        session = cls(tuner, backend=backend, executor=executor, callbacks=callbacks)
+        session._pending = [dict(c) for c in state.get("pending", [])]
+        session._pending_recommend_s = float(state.get("pending_recommend_s", 0.0))
+        session.rounds = copy.deepcopy(state.get("rounds", []))
+        return session
+
+
+def checkpoint_every(
+    path_fn: Callable[[int], str], every: int = 1
+) -> Callback:
+    """Convenience callback factory: JSON-dump ``session.state_dict()`` every
+    ``every`` observations to ``path_fn(iteration)``."""
+    import json
+
+    def cb(session: TuningSession, obs: Observation) -> None:
+        if session.n_observations % every == 0:
+            with open(path_fn(obs.iteration), "w") as f:
+                json.dump(session.state_dict(), f)
+
+    return cb

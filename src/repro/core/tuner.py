@@ -11,9 +11,29 @@ changes with the index type. Components:
 * optional recall-floor constraint mode with CEI (Eq. 7) and bootstrapping
   from previous constraint levels (§IV-F),
 * batch-parallel rounds (``q > 1``): sequential-greedy q-EHVI / q-CEI with
-  Kriging-believer fantasies, evaluated through the objective's vectorized
-  ``evaluate_batch`` when available. ``q == 1`` reproduces the original
+  Kriging-believer fantasies. ``q == 1`` reproduces the original
   single-point trajectory exactly.
+
+Ask/tell protocol
+-----------------
+Every tuner is a pure *recommender*: ``ask(n)`` proposes up to ``n``
+configurations (it may exceed ``n`` for mandatory warm-up, e.g. the per-type
+default sampling of Algorithm 1 lines 1–5, and may return fewer — or none,
+signalling exhaustion). ``tell(config, result)`` feeds one result back:
+either the raw measurement dict or a ``TuningFailure``; failures receive the
+worst values in history at record time (paper §V-A). The tuner never calls
+the objective itself — evaluation dispatch, budgets, the time ledger and
+checkpointing belong to :class:`repro.core.session.TuningSession`. The
+legacy ``tuner.run(n)`` is a thin shim over a session and reproduces the
+pre-redesign trajectory exactly (regression-tested).
+
+Objectives are first-class (:mod:`repro.core.objectives`): pass
+``objective_spec=recall_floor(0.9)`` instead of the legacy bare ``transform``
+callable; both remain accepted.
+
+Checkpointing: ``state_dict()`` / ``load_state_dict()`` round-trip history,
+RNG state, and polling/abandon state through JSON-compatible dicts so a
+killed tuning run resumes bit-identically (see ``TuningSession.restore``).
 """
 from __future__ import annotations
 
@@ -27,14 +47,22 @@ from .acquisition import cei, greedy_select, qehvi_sequential_greedy
 from .budget import SuccessiveAbandon
 from .gp import GP
 from .normalize import npi_normalize
+from .objectives import (
+    ObjectiveSpec,
+    TuningFailure,
+    cost_aware_transform,
+    default_transform,
+    spec_from_transform,
+)
 from .pareto import non_dominated_mask, pareto_front
 from .space import Config, SearchSpace
 
+__all__ = [
+    "Observation", "TunerBase", "TuningFailure", "VDTuner",
+    "cost_aware_transform", "default_transform",
+]
+
 Objective = Callable[[Config], Dict[str, float]]
-
-
-class TuningFailure(RuntimeError):
-    """Raised by an objective when a configuration crashes / times out."""
 
 
 @dataclasses.dataclass
@@ -52,40 +80,122 @@ class Observation:
     def index_type(self) -> str:
         return self.config["index_type"]
 
+    # --- serialization (JSON-compatible) --------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "iteration": int(self.iteration),
+            "config": dict(self.config),
+            "y": [float(v) for v in np.asarray(self.y).ravel()],
+            "raw": {k: float(v) for k, v in self.raw.items()},
+            "recommend_time": float(self.recommend_time),
+            "eval_time": float(self.eval_time),
+            "failed": bool(self.failed),
+            "bootstrap": bool(self.bootstrap),
+        }
 
-def default_transform(result: Dict[str, float]) -> Tuple[float, float]:
-    return float(result["speed"]), float(result["recall"])
-
-
-def cost_aware_transform(eta: float = 1.0) -> Callable[[Dict[str, float]], Tuple[float, float]]:
-    """Eq. 8: QP$ = speed / (eta * memory GiB). Any resource/price function can
-    be swapped in here; NPI normalization makes the tuner invariant to eta."""
-
-    def tf(result: Dict[str, float]) -> Tuple[float, float]:
-        mem = max(float(result.get("mem_gib", 1.0)), 1e-9)
-        return float(result["speed"]) / (eta * mem), float(result["recall"])
-
-    return tf
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Observation":
+        return cls(
+            iteration=int(d["iteration"]),
+            config=dict(d["config"]),
+            y=np.asarray(d["y"], np.float64),
+            raw=dict(d["raw"]),
+            recommend_time=float(d["recommend_time"]),
+            eval_time=float(d["eval_time"]),
+            failed=bool(d["failed"]),
+            bootstrap=bool(d["bootstrap"]),
+        )
 
 
 class TunerBase:
-    """Shared bookkeeping: evaluation with failure fallback + history."""
+    """Shared recommender bookkeeping: history + worst-value failure feedback.
+
+    Subclasses implement ``ask``; ``tell`` is shared. ``objective`` is kept
+    for the legacy self-driving path (``run`` / ``step``) and as the default
+    backend when a ``TuningSession`` is built from the tuner alone — new code
+    may pass ``objective=None`` and wire the backend into the session.
+    """
 
     name = "base"
 
     def __init__(
         self,
         space: SearchSpace,
-        objective: Objective,
+        objective: Optional[Objective] = None,
         seed: int = 0,
-        transform: Callable[[Dict[str, float]], Tuple[float, float]] = default_transform,
+        transform: Optional[Callable[[Dict[str, float]], Tuple[float, float]]] = None,
+        objective_spec: Optional[ObjectiveSpec] = None,
     ):
+        if transform is not None and objective_spec is not None:
+            raise ValueError("pass either transform= (legacy) or objective_spec=, not both")
         self.space = space
         self.objective = objective
         self.rng = np.random.default_rng(seed)
-        self.transform = transform
+        self.spec = objective_spec if objective_spec is not None else spec_from_transform(transform)
+        self.transform = self.spec.transform  # back-compat attribute
         self.history: List[Observation] = []
         self._seed = seed
+
+    # ------------------------------------------------------------------
+    # ask/tell protocol
+    # ------------------------------------------------------------------
+    def ask(self, n: int = 1) -> List[Config]:
+        """Propose up to ``n`` configurations to evaluate next.
+
+        May exceed ``n`` for mandatory warm-up batches and may return fewer;
+        an empty list means the recommender is exhausted (e.g. ``DefaultOnly``
+        after covering every index type).
+        """
+        raise NotImplementedError
+
+    def tell(
+        self,
+        config: Config,
+        result: Any,
+        recommend_time: float = 0.0,
+        eval_time: float = 0.0,
+    ) -> Observation:
+        """Feed back one evaluation result (raw dict or ``TuningFailure``)."""
+        obs = self._record(config, result, recommend_time, eval_time)
+        self._on_tell(obs)
+        return obs
+
+    def _on_tell(self, obs: Observation) -> None:
+        """Subclass hook run after each observation lands (e.g. bandit credit)."""
+
+    # ------------------------------------------------------------------
+    # checkpointing
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """JSON-compatible snapshot of all mutable tuner state.
+
+        Constructor arguments (space, objective spec, hyperparameters) are
+        NOT serialized — ``load_state_dict`` expects a tuner constructed with
+        identical arguments, mirroring how model checkpoints work.
+        """
+        return {
+            "tuner": self.name,
+            "seed": self._seed,
+            "rng": self.rng.bit_generator.state,
+            "history": [o.to_dict() for o in self.history],
+            "extra": self._extra_state(),
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> "TunerBase":
+        if state.get("tuner") != self.name:
+            raise ValueError(
+                f"state is for tuner {state.get('tuner')!r}, not {self.name!r}"
+            )
+        self.rng.bit_generator.state = state["rng"]
+        self.history = [Observation.from_dict(d) for d in state["history"]]
+        self._load_extra_state(state.get("extra", {}))
+        return self
+
+    def _extra_state(self) -> Dict[str, Any]:
+        return {}
+
+    def _load_extra_state(self, extra: Dict[str, Any]) -> None:
+        pass
 
     # ------------------------------------------------------------------
     def _record(
@@ -172,8 +282,22 @@ class TunerBase:
         ok = ys[:, 1] >= rlim
         return float(ys[ok, 0].max()) if ok.any() else float("nan")
 
+    # ------------------------------------------------------------------
+    # legacy self-driving shim
+    # ------------------------------------------------------------------
+    def preferred_executor(self) -> str:
+        """Evaluation-dispatch policy reproducing this tuner's pre-ask/tell
+        behavior when a session is built with ``executor=None``."""
+        return "sequential"
+
     def run(self, n_iters: int) -> "TunerBase":
-        raise NotImplementedError
+        """Legacy one-call driver: build a ``TuningSession`` over the tuner's
+        own objective and run it. Kept as a thin shim; reproduces the
+        pre-redesign observation sequence exactly."""
+        from .session import TuningSession  # deferred: session imports tuner
+
+        TuningSession(self).run(n_iters)
+        return self
 
 
 class VDTuner(TunerBase):
@@ -184,9 +308,9 @@ class VDTuner(TunerBase):
     def __init__(
         self,
         space: SearchSpace,
-        objective: Objective,
+        objective: Optional[Objective] = None,
         seed: int = 0,
-        transform=default_transform,
+        transform=None,
         abandon_window: int = 10,
         n_candidates: int = 512,
         mc_samples: int = 64,
@@ -194,15 +318,23 @@ class VDTuner(TunerBase):
         rlim: Optional[float] = None,
         bootstrap_history: Optional[Sequence[Observation]] = None,
         q: int = 1,
+        objective_spec: Optional[ObjectiveSpec] = None,
     ):
-        super().__init__(space, objective, seed, transform)
+        super().__init__(space, objective, seed, transform, objective_spec)
         if q < 1:
             raise ValueError(f"q must be >= 1, got {q}")
         self.abandon = SuccessiveAbandon(space.type_names, window=abandon_window)
         self.n_candidates = n_candidates
         self.mc_samples = mc_samples
         self.gp_fit_steps = gp_fit_steps
-        self.rlim = rlim  # user recall-floor preference (constraint mode)
+        # user recall-floor preference (constraint mode); an ObjectiveSpec
+        # carrying rlim (e.g. objectives.recall_floor) sets it implicitly
+        if rlim is not None and self.spec.rlim is not None and rlim != self.spec.rlim:
+            raise ValueError(
+                f"conflicting recall floors: rlim={rlim} but objective_spec "
+                f"{self.spec.name!r} carries rlim={self.spec.rlim}"
+            )
+        self.rlim = rlim if rlim is not None else self.spec.rlim
         self.q = q  # configurations proposed (and evaluated) per BO round
         self._poll_cursor = 0
         if bootstrap_history:
@@ -213,12 +345,79 @@ class VDTuner(TunerBase):
                 self.history.append(dataclasses.replace(o, bootstrap=True))
 
     # ------------------------------------------------------------------
+    # ask/tell
+    # ------------------------------------------------------------------
+    def ask(self, n: int = 1) -> List[Config]:
+        """Recommend the next batch.
+
+        Warm-up (Algorithm 1 lines 1–5): while any index type lacks an
+        observation, the remaining per-type defaults are returned as one
+        mandatory batch (possibly exceeding ``n`` — exactly the legacy
+        initial sampling). Afterwards each call is one BO round proposing
+        ``min(q, n)`` configurations of the polled index type.
+        """
+        seen = set(o.index_type for o in self.history)
+        todo = [self.space.default_config(t) for t in self.space.type_names if t not in seen]
+        if todo:
+            return todo
+        q = max(1, min(self.q, n))
+        Y, types = self.Y, self.types
+
+        # --- successive abandon (lines 7–14) ---------------------------
+        self.abandon.step(Y, types)
+
+        # --- NPI normalization + holistic surrogate (lines 15–18) ------
+        mode = "balanced" if self.rlim is None else "max"
+        Yn, bases = npi_normalize(Y, types, mode=mode)
+        gp = GP(seed=int(self.rng.integers(2**31)), fit_steps=self.gp_fit_steps)
+        gp.fit(self.X_enc, Yn)
+
+        # --- poll next index type & recommend (lines 19–21) ------------
+        t = self._next_poll_type()
+        cands = self._candidates(t)
+        Xc = np.stack([self.space.encode(c) for c in cands])
+
+        if self.rlim is None:
+            # EHVI with ref = 0.5 * base; in normalized space the base is
+            # (1, 1), so r = (0.5, 0.5); the front is the normalized
+            # non-dominated set across all types (§IV-C).
+            front = Yn[non_dominated_mask(Yn)]
+            ref = np.array([0.5, 0.5])
+            idx = qehvi_sequential_greedy(
+                gp, Xc, front, ref, self.rng, q, self.mc_samples
+            )
+        else:
+            # constraint mode: EI(speed) * Pr(recall > rlim).
+            idx = self._cei_select(gp, Xc, Y, bases, t, q)
+
+        return [cands[i] for i in idx]
+
+    def preferred_executor(self) -> str:
+        # q=1 evaluated the warm-up defaults sequentially pre-redesign; q>1
+        # routed batches through the backend's evaluate_batch.
+        return "sequential" if self.q == 1 else "batch"
+
+    # ------------------------------------------------------------------
+    # checkpointing
+    # ------------------------------------------------------------------
+    def _extra_state(self) -> Dict[str, Any]:
+        return {
+            "poll_cursor": int(self._poll_cursor),
+            "abandon": self.abandon.state_dict(),
+        }
+
+    def _load_extra_state(self, extra: Dict[str, Any]) -> None:
+        self._poll_cursor = int(extra["poll_cursor"])
+        self.abandon.load_state_dict(extra["abandon"])
+
+    # ------------------------------------------------------------------
     def _initial_sampling(self):
         """Algorithm 1 lines 1–5: each index type's default configuration.
 
-        With ``q > 1`` the defaults go through the batch evaluation path (they
-        are independent, so batching them is free parallelism); with ``q == 1``
-        they are evaluated sequentially exactly as before.
+        Legacy helper (the session/ask path emits the same batch through
+        ``ask``). With ``q > 1`` the defaults go through the batch evaluation
+        path; with ``q == 1`` they are evaluated sequentially exactly as
+        before.
         """
         seen = set(o.index_type for o in self.history)
         todo = [self.space.default_config(t) for t in self.space.type_names if t not in seen]
@@ -297,56 +496,14 @@ class VDTuner(TunerBase):
         return greedy_select(gp, Xc, q, score, on_fantasy)
 
     def step(self, max_new: Optional[int] = None) -> List[Observation]:
-        """One BO round: poll a type, propose ``q`` configs by sequential-greedy
-        acquisition (Kriging-believer fantasies between picks), evaluate the
-        batch, and record the observations in proposal order.
+        """Legacy self-driving round: ``ask`` + evaluate + ``tell`` in one
+        call, against the tuner's own objective. Prefer ``TuningSession``.
 
         ``max_new`` clamps the batch so a run never overshoots its iteration
         budget. With ``q == 1`` the round consumes exactly the same RNG draws
         and picks the same argmax as the original single-point step.
         """
         t0 = time.perf_counter()
-        q = self.q if max_new is None else max(1, min(self.q, max_new))
-        Y, types = self.Y, self.types
-
-        # --- successive abandon (lines 7–14) ---------------------------
-        self.abandon.step(Y, types)
-
-        # --- NPI normalization + holistic surrogate (lines 15–18) ------
-        mode = "balanced" if self.rlim is None else "max"
-        Yn, bases = npi_normalize(Y, types, mode=mode)
-        gp = GP(seed=int(self.rng.integers(2**31)), fit_steps=self.gp_fit_steps)
-        gp.fit(self.X_enc, Yn)
-
-        # --- poll next index type & recommend (lines 19–21) ------------
-        t = self._next_poll_type()
-        cands = self._candidates(t)
-        Xc = np.stack([self.space.encode(c) for c in cands])
-
-        if self.rlim is None:
-            # EHVI with ref = 0.5 * base; in normalized space the base is
-            # (1, 1), so r = (0.5, 0.5); the front is the normalized
-            # non-dominated set across all types (§IV-C).
-            front = Yn[non_dominated_mask(Yn)]
-            ref = np.array([0.5, 0.5])
-            idx = qehvi_sequential_greedy(
-                gp, Xc, front, ref, self.rng, q, self.mc_samples
-            )
-        else:
-            # constraint mode: EI(speed) * Pr(recall > rlim).
-            idx = self._cei_select(gp, Xc, Y, bases, t, q)
-
-        cfgs = [cands[i] for i in idx]
+        cfgs = self.ask(self.q if max_new is None else max_new)
         rec_time = time.perf_counter() - t0
-
-        # --- evaluate & update (line 22) --------------------------------
         return self._evaluate_batch(cfgs, recommend_time=rec_time / len(cfgs))
-
-    def run(self, n_iters: int) -> "VDTuner":
-        self._initial_sampling()
-        while True:
-            done = len([o for o in self.history if not o.bootstrap])
-            if done >= n_iters:
-                break
-            self.step(max_new=n_iters - done)
-        return self

@@ -33,6 +33,12 @@ def set_default_blocks(bq: int, bk: int) -> None:
     DEFAULT_BQ, DEFAULT_BK = int(bq), int(bk)
 
 
+def get_default_blocks() -> tuple[int, int]:
+    """Current process-wide (bq, bk) — pair with ``set_default_blocks`` to
+    save/restore around a scoped override."""
+    return DEFAULT_BQ, DEFAULT_BK
+
+
 def _round_up(v: int, m: int) -> int:
     return (v + m - 1) // m * m
 

@@ -22,8 +22,8 @@ from typing import Dict
 
 
 from ..configs.base import SHAPES, ArchConfig
+from ..core.objectives import SequentialBatchMixin, TuningFailure
 from ..core.space import Param, SearchSpace
-from ..core.tuner import TuningFailure
 from ..distributed.sharding import ShardingRules
 from ..kernels import flash_xla
 from ..launch import hlo_analysis
@@ -54,9 +54,13 @@ _REMAT = {
 }
 
 
-class ServeTuningEnv:
+class ServeTuningEnv(SequentialBatchMixin):
     """config -> {'speed': est. steps/s at the roofline, 'recall': memory
-    headroom fraction} for one (arch, shape, mesh)."""
+    headroom fraction} for one (arch, shape, mesh).
+
+    A full ``EvalBackend``: the ``SequentialBatchMixin`` base supplies the
+    ``evaluate_batch`` half of the protocol (compiles are process-global via
+    the flash-block default, so batches evaluate one at a time)."""
 
     def __init__(self, cfg: ArchConfig, shape_name: str, mesh):
         self.cfg = cfg
@@ -69,6 +73,9 @@ class ServeTuningEnv:
         if key in self.cache:
             return dict(self.cache[key])
         remat = _REMAT[config["index_type"]]
+        # save the blocks actually in effect — restoring hardcoded defaults
+        # would clobber a caller's own set_default_blocks override
+        prev_blocks = flash_xla.get_default_blocks()
         flash_xla.set_default_blocks(config["flash_bq"], config["flash_bk"])
         try:
             rules = ShardingRules(self.mesh, seq_parallel=bool(config["seq_parallel"]))
@@ -97,6 +104,6 @@ class ServeTuningEnv:
         except Exception as e:  # compile failure = crashed configuration
             raise TuningFailure(str(e)) from e
         finally:
-            flash_xla.set_default_blocks(512, 1024)
+            flash_xla.set_default_blocks(*prev_blocks)
         self.cache[key] = dict(result)
         return result

@@ -9,8 +9,8 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
+from ..core.objectives import TuningFailure
 from ..core.space import Param, SearchSpace
-from ..core.tuner import TuningFailure
 from .datasets import VectorDataset
 from .engine import VDMSInstance, batch_signature, measure_batch
 
@@ -67,6 +67,11 @@ def make_space() -> SearchSpace:
 # ---------------------------------------------------------------------------
 class VDMSTuningEnv:
     """Callable black-box: config -> {'speed', 'recall', 'mem_gib', ...}.
+
+    Implements the full ``repro.core.objectives.EvalBackend`` protocol: the
+    per-config ``__call__`` plus a genuinely vectorized ``evaluate_batch``
+    (cache dedupe, threaded index builds, batched measurement), so a
+    ``TuningSession`` with the batch executor exploits batch structure here.
 
     ``mode="wall"`` measures real QPS; ``mode="analytic"`` uses the engine's
     deterministic cost model (recall is always real). Results are cached by

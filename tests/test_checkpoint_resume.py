@@ -1,0 +1,114 @@
+"""Property tests: checkpoint/resume at ANY iteration is bit-identical.
+
+For VDTuner (q=1 and q=4, rlim on/off) and the stateful OpenTuner baseline,
+``TuningSession.restore(json.loads(json.dumps(session.state_dict())))`` taken
+after an arbitrary hypothesis-chosen number of observations — including
+mid-batch for q=4 — must continue exactly like the uninterrupted session:
+same configs, same objective values, same failure flags, in the same order.
+"""
+import json
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional test dep; pip install -e .[test]")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import OpenTunerLike, Param, SearchSpace, StopSession, TuningSession, VDTuner
+
+N_ITERS = 8
+_FAST = dict(gp_fit_steps=24, n_candidates=48, mc_samples=16)
+
+
+def _toy_objective(cfg):
+    t = cfg["index_type"]
+    k = cfg.get("ka", cfg.get("kb", 0.5))
+    k = k / 8.0 if t == "A" else k
+    sysq = 1.0 - (cfg["s1"] - 0.6) ** 2
+    if t == "A":
+        return {"speed": 80 * (1 - k) * sysq, "recall": 0.5 + 0.45 * k, "mem_gib": 1.0}
+    return {"speed": 50 * (1 - k) * sysq, "recall": 0.6 + 0.39 * k, "mem_gib": 0.5}
+
+
+def _toy_space():
+    return SearchSpace(
+        index_types={
+            "A": [Param("ka", "grid", choices=(1, 2, 4, 8), default=2)],
+            "B": [Param("kb", "float", 0.0, 1.0, default=0.5)],
+        },
+        system_params=[
+            Param("s1", "float", 0.0, 1.0, default=0.5),
+            Param("s2", "cat", choices=(False, True), default=False),
+        ],
+    )
+
+
+def _make_vdtuner(q, rlim):
+    return VDTuner(_toy_space(), _toy_objective, seed=11, q=q, rlim=rlim, **_FAST)
+
+
+# uninterrupted reference trajectories, one per (q, rlim) combo — computed
+# once, reused across hypothesis examples
+_reference = {}
+
+
+def _reference_history(q, rlim):
+    key = (q, rlim)
+    if key not in _reference:
+        tuner = _make_vdtuner(q, rlim)
+        TuningSession(tuner).run(N_ITERS)
+        _reference[key] = tuner.history
+    return _reference[key]
+
+
+def _stop_after(cut):
+    def cb(session, obs):
+        if session.n_observations >= cut:
+            raise StopSession
+
+    return cb
+
+
+def _assert_same_history(got, want):
+    assert [o.config for o in got] == [o.config for o in want]
+    assert np.array_equal(np.stack([o.y for o in got]), np.stack([o.y for o in want]))
+    assert [o.failed for o in got] == [o.failed for o in want]
+
+
+@pytest.mark.parametrize("q", [1, 4], ids=["q1", "q4"])
+@pytest.mark.parametrize("rlim", [None, 0.85], ids=["ehvi", "cei"])
+@settings(max_examples=5, deadline=None)
+@given(cut=st.integers(1, N_ITERS - 1))
+def test_vdtuner_resume_is_bit_identical(q, rlim, cut):
+    want = _reference_history(q, rlim)
+
+    part = _make_vdtuner(q, rlim)
+    session = TuningSession(part, callbacks=[_stop_after(cut)]).run(N_ITERS)
+    assert session.n_observations == cut  # checkpoint lands exactly at the cut
+
+    state = json.loads(json.dumps(session.state_dict()))
+    fresh = _make_vdtuner(q, rlim)
+    TuningSession.restore(state, fresh).run(N_ITERS)
+    _assert_same_history(fresh.history, want)
+
+
+_opentuner_reference = {}
+
+
+@settings(max_examples=10, deadline=None)
+@given(cut=st.integers(1, 11))
+def test_opentuner_resume_is_bit_identical(cut):
+    if "history" not in _opentuner_reference:
+        tuner = OpenTunerLike(_toy_space(), _toy_objective, seed=13)
+        TuningSession(tuner).run(12)
+        _opentuner_reference["history"] = tuner.history
+        _opentuner_reference["credits"] = list(tuner._credits)
+    want = _opentuner_reference["history"]
+
+    part = OpenTunerLike(_toy_space(), _toy_objective, seed=13)
+    session = TuningSession(part, callbacks=[_stop_after(cut)]).run(12)
+    state = json.loads(json.dumps(session.state_dict()))
+    fresh = OpenTunerLike(_toy_space(), _toy_objective, seed=13)
+    TuningSession.restore(state, fresh).run(12)
+    _assert_same_history(fresh.history, want)
+    assert fresh._credits == _opentuner_reference["credits"]  # bandit state too

@@ -1,0 +1,519 @@
+"""Ask/tell core + TuningSession regression tests (no optional deps).
+
+Covers the contracts the ask/tell redesign must keep:
+* the legacy ``tuner.run(n)`` shim reproduces the pre-redesign observation
+  sequence (configs, y, failure flags) EXACTLY, for VDTuner (q=1 and q=4,
+  rlim on/off) and every baseline — verbatim copies of the pre-redesign
+  per-tuner loops are the reference implementations,
+* ``TuningSession`` mechanics: budgets, exhaustion, stop conditions,
+  callbacks/StopSession, executors, the recommend/eval ledger schema,
+* objective specs and the EvalBackend adapter,
+* ``state_dict``/``restore`` JSON round-trips (deterministic checks; the
+  hypothesis property tests live in ``test_checkpoint_resume.py``).
+"""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    GP,
+    BatchExecutor,
+    ObjectiveSpec,
+    OpenTunerLike,
+    OtterTuneLike,
+    Param,
+    QEHVI,
+    RandomLHS,
+    DefaultOnly,
+    SearchSpace,
+    SequentialBatchMixin,
+    StopSession,
+    ThreadedExecutor,
+    TuningFailure,
+    TuningSession,
+    VDTuner,
+    as_eval_backend,
+    cost_aware,
+    ehvi_mc,
+    ei,
+    non_dominated_mask,
+    npi_normalize,
+    qehvi_sequential_greedy,
+    recall_floor,
+    speed_recall,
+)
+from repro.core.baselines import _weighted_sum
+
+
+def _toy_objective(cfg):
+    t = cfg["index_type"]
+    k = cfg.get("ka", cfg.get("kb", 0.5))
+    k = k / 8.0 if t == "A" else k
+    sysq = 1.0 - (cfg["s1"] - 0.6) ** 2
+    if t == "A":
+        return {"speed": 80 * (1 - k) * sysq, "recall": 0.5 + 0.45 * k, "mem_gib": 1.0}
+    return {"speed": 50 * (1 - k) * sysq, "recall": 0.6 + 0.39 * k, "mem_gib": 0.5}
+
+
+class _ToyBatchObjective(SequentialBatchMixin):
+    """Toy EvalBackend with a real ``evaluate_batch`` (counts batch calls)."""
+
+    def __init__(self):
+        self.n_calls = 0
+        self.n_batch_calls = 0
+
+    def __call__(self, cfg):
+        self.n_calls += 1
+        return _toy_objective(cfg)
+
+    def evaluate_batch(self, cfgs):
+        self.n_batch_calls += 1
+        return super().evaluate_batch(cfgs)
+
+
+def _toy_space():
+    return SearchSpace(
+        index_types={
+            "A": [Param("ka", "grid", choices=(1, 2, 4, 8), default=2)],
+            "B": [Param("kb", "float", 0.0, 1.0, default=0.5)],
+        },
+        system_params=[
+            Param("s1", "float", 0.0, 1.0, default=0.5),
+            Param("s2", "cat", choices=(False, True), default=False),
+        ],
+    )
+
+
+_FAST = dict(gp_fit_steps=24, n_candidates=48, mc_samples=16)
+
+
+def _same_trajectory(a, b):
+    assert [o.config for o in a.history] == [o.config for o in b.history]
+    assert np.array_equal(np.stack([o.y for o in a.history]), np.stack([o.y for o in b.history]))
+    assert [o.failed for o in a.history] == [o.failed for o in b.history]
+    assert [o.bootstrap for o in a.history] == [o.bootstrap for o in b.history]
+
+
+# ---------------------------------------------------------------------------
+# Verbatim pre-redesign reference implementations
+# ---------------------------------------------------------------------------
+def _legacy_vdtuner_step(self, max_new=None):
+    """Verbatim copy of the pre-ask/tell VDTuner.step() (PR 1) used as the
+    reference for the run()-shim equivalence tests."""
+    t0 = time.perf_counter()
+    q = self.q if max_new is None else max(1, min(self.q, max_new))
+    Y, types = self.Y, self.types
+    self.abandon.step(Y, types)
+    mode = "balanced" if self.rlim is None else "max"
+    Yn, bases = npi_normalize(Y, types, mode=mode)
+    gp = GP(seed=int(self.rng.integers(2**31)), fit_steps=self.gp_fit_steps)
+    gp.fit(self.X_enc, Yn)
+    t = self._next_poll_type()
+    cands = self._candidates(t)
+    Xc = np.stack([self.space.encode(c) for c in cands])
+    if self.rlim is None:
+        front = Yn[non_dominated_mask(Yn)]
+        ref = np.array([0.5, 0.5])
+        idx = qehvi_sequential_greedy(gp, Xc, front, ref, self.rng, q, self.mc_samples)
+    else:
+        idx = self._cei_select(gp, Xc, Y, bases, t, q)
+    cfgs = [cands[i] for i in idx]
+    rec_time = time.perf_counter() - t0
+    return self._evaluate_batch(cfgs, recommend_time=rec_time / len(cfgs))
+
+
+def _legacy_vdtuner_run(self, n_iters):
+    """Verbatim copy of the pre-ask/tell VDTuner.run() loop."""
+    self._initial_sampling()
+    while True:
+        done = len([o for o in self.history if not o.bootstrap])
+        if done >= n_iters:
+            break
+        _legacy_vdtuner_step(self, max_new=n_iters - done)
+    return self
+
+
+def _legacy_default_run(self, n_iters):
+    for t in self.space.type_names:
+        if len(self.history) >= n_iters:
+            break
+        self._evaluate(self.space.default_config(t), recommend_time=0.0)
+    return self
+
+
+def _legacy_random_lhs_run(self, n_iters):
+    t0 = time.perf_counter()
+    cfgs = self.space.lhs(self.rng, n_iters)
+    rec = time.perf_counter() - t0
+    for c in cfgs:
+        self._evaluate(c, recommend_time=rec / max(n_iters, 1))
+    return self
+
+
+def _legacy_ottertune_run(self, n_iters):
+    for c in self.space.lhs(self.rng, min(self.n_init, n_iters)):
+        self._evaluate(c, recommend_time=0.0)
+    while len(self.history) < n_iters:
+        t0 = time.perf_counter()
+        Y = self.Y
+        scal = _weighted_sum(Y)
+        gp = GP(seed=int(self.rng.integers(2**31)))
+        gp.fit(self.X_enc, scal[:, None])
+        cands = self.space.sample(self.rng, self.n_candidates)
+        Xc = np.stack([self.space.encode(c) for c in cands])
+        mean, std = gp.predict(Xc)
+        acq = ei(mean[:, 0], std[:, 0], float(scal.max()))
+        cfg = cands[int(np.argmax(acq))]
+        self._evaluate(cfg, recommend_time=time.perf_counter() - t0)
+    return self
+
+
+def _legacy_qehvi_run(self, n_iters):
+    for c in self.space.lhs(self.rng, min(self.n_init, n_iters)):
+        self._evaluate(c, recommend_time=0.0)
+    while len(self.history) < n_iters:
+        t0 = time.perf_counter()
+        Y = self.Y
+        gp = GP(seed=int(self.rng.integers(2**31)))
+        gp.fit(self.X_enc, Y)
+        cands = self.space.sample(self.rng, self.n_candidates)
+        Xc = np.stack([self.space.encode(c) for c in cands])
+        mean, std = gp.predict(Xc)
+        front = Y[non_dominated_mask(Y)]
+        ref = np.zeros(2)
+        acq = ehvi_mc(mean, std, front, ref, self.rng, self.mc_samples)
+        cfg = cands[int(np.argmax(acq))]
+        self._evaluate(cfg, recommend_time=time.perf_counter() - t0)
+    return self
+
+
+def _legacy_opentuner_run(self, n_iters):
+    while len(self.history) < n_iters:
+        t0 = time.perf_counter()
+        tech = self._pick_technique()
+        cfg = self._propose(tech)
+        rec = time.perf_counter() - t0
+        before = _weighted_sum(self.Y).max() if self.history else -np.inf
+        self._evaluate(cfg, recommend_time=rec)
+        after = _weighted_sum(self.Y).max()
+        self._uses.append(tech)
+        self._credits.append(1.0 if after > before else 0.0)
+    return self
+
+
+# ---------------------------------------------------------------------------
+# Legacy-equivalence: run() shim == pre-redesign loops
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("q", [1, 4], ids=["q1", "q4"])
+@pytest.mark.parametrize("rlim", [None, 0.85], ids=["ehvi", "cei"])
+def test_vdtuner_run_shim_matches_legacy(q, rlim):
+    ref = VDTuner(_toy_space(), _toy_objective, seed=5, abandon_window=6, rlim=rlim, q=q, **_FAST)
+    _legacy_vdtuner_run(ref, 11)
+    new = VDTuner(_toy_space(), _toy_objective, seed=5, abandon_window=6, rlim=rlim, q=q, **_FAST)
+    new.run(11)
+    _same_trajectory(new, ref)
+
+
+def test_vdtuner_run_shim_matches_legacy_with_batch_backend():
+    """q=4 through a backend exposing evaluate_batch: same dispatch both ways."""
+    env_ref = _ToyBatchObjective()
+    ref = VDTuner(_toy_space(), env_ref, seed=2, q=4, **_FAST)
+    _legacy_vdtuner_run(ref, 10)
+    env_new = _ToyBatchObjective()
+    new = VDTuner(_toy_space(), env_new, seed=2, q=4, **_FAST)
+    new.run(10)
+    _same_trajectory(new, ref)
+    assert env_new.n_batch_calls == env_ref.n_batch_calls  # same vectorized dispatch
+
+
+def test_vdtuner_run_shim_matches_legacy_with_bootstrap():
+    first = VDTuner(_toy_space(), _toy_objective, seed=2, rlim=0.8, **_FAST).run(6)
+    ref = VDTuner(
+        _toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST
+    )
+    _legacy_vdtuner_run(ref, 5)
+    new = VDTuner(
+        _toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST
+    )
+    new.run(5)
+    _same_trajectory(new, ref)
+    assert sum(1 for o in new.history if o.bootstrap) == len(first.history)
+
+
+@pytest.mark.parametrize(
+    "cls,legacy,kw",
+    [
+        (DefaultOnly, _legacy_default_run, {}),
+        (RandomLHS, _legacy_random_lhs_run, {}),
+        (OtterTuneLike, _legacy_ottertune_run, dict(n_init=4, n_candidates=64)),
+        (QEHVI, _legacy_qehvi_run, dict(n_init=4, n_candidates=64, mc_samples=16)),
+        (OpenTunerLike, _legacy_opentuner_run, {}),
+    ],
+    ids=["default", "random_lhs", "ottertune", "qehvi", "opentuner"],
+)
+def test_baseline_run_shim_matches_legacy(cls, legacy, kw):
+    ref = cls(_toy_space(), _toy_objective, seed=9, **kw)
+    legacy(ref, 9)
+    new = cls(_toy_space(), _toy_objective, seed=9, **kw)
+    new.run(9)
+    _same_trajectory(new, ref)
+    if cls is OpenTunerLike:
+        assert new._uses == ref._uses
+        assert new._credits == ref._credits
+
+
+def test_opentuner_failure_credits_match_legacy():
+    calls = {"n": 0}
+
+    def flaky(cfg):
+        calls["n"] += 1
+        if calls["n"] % 3 == 0:
+            raise TuningFailure("boom")
+        return _toy_objective(cfg)
+
+    ref = OpenTunerLike(_toy_space(), flaky, seed=6)
+    calls["n"] = 0
+    _legacy_opentuner_run(ref, 10)
+    new = OpenTunerLike(_toy_space(), flaky, seed=6)
+    calls["n"] = 0
+    new.run(10)
+    _same_trajectory(new, ref)
+    assert new._credits == ref._credits
+
+
+# ---------------------------------------------------------------------------
+# Session mechanics
+# ---------------------------------------------------------------------------
+def test_session_budget_and_ledger_schema():
+    tuner = VDTuner(_toy_space(), seed=0, q=2, **_FAST)
+    session = TuningSession(tuner, backend=_toy_objective)
+    session.run(7)
+    assert session.n_observations == 7
+    ledger = session.ledger_dict()
+    assert ledger["schema"] == 1
+    assert ledger["tuner"] == "vdtuner"
+    assert ledger["totals"]["n_evals"] == 7
+    assert ledger["totals"]["n_rounds"] == len(ledger["rounds"])
+    for r in ledger["rounds"]:
+        assert set(r) == {"round", "n_asked", "ask_s", "evals"}
+        for e in r["evals"]:
+            assert set(e) == {"iteration", "recommend_s", "eval_s", "failed"}
+    assert json.dumps(ledger)  # JSON-stable
+
+
+def test_session_backend_separate_from_tuner():
+    tuner = VDTuner(_toy_space(), seed=0, **_FAST)  # no objective: pure recommender
+    assert tuner.objective is None
+    TuningSession(tuner, backend=_toy_objective).run(4)
+    assert len(tuner.history) == 4
+    with pytest.raises(ValueError):
+        TuningSession(VDTuner(_toy_space(), seed=0))
+
+
+def test_session_stops_on_exhausted_recommender():
+    tuner = DefaultOnly(_toy_space(), _toy_objective, seed=0)
+    session = TuningSession(tuner).run(50)
+    assert session.n_observations == 2  # one per index type, then empty ask
+
+
+def test_session_stop_predicate_and_callbacks():
+    seen = []
+    tuner = VDTuner(_toy_space(), _toy_objective, seed=1, **_FAST)
+    session = TuningSession(tuner, callbacks=[lambda s, o: seen.append(o.iteration)])
+    session.run(6, stop=lambda s: s.n_observations >= 4)
+    assert session.n_observations == 4
+    assert seen == [0, 1, 2, 3]
+
+
+def test_stop_session_mid_round_keeps_pending():
+    def stopper(session, obs):
+        if session.n_observations >= 3:
+            raise StopSession
+
+    tuner = VDTuner(_toy_space(), _toy_objective, seed=1, q=4, **_FAST)
+    session = TuningSession(tuner, callbacks=[stopper]).run(8)
+    assert session.n_observations == 3
+    assert len(session.pending) >= 1  # untold remainder of the q=4 round survives
+    state = session.state_dict()
+    assert state["pending"] == session.pending
+
+
+def test_failed_configs_get_worst_feedback_through_session():
+    calls = {"n": 0}
+
+    def flaky(cfg):
+        calls["n"] += 1
+        if calls["n"] % 4 == 0:
+            raise TuningFailure("boom")
+        return _toy_objective(cfg)
+
+    tuner = VDTuner(_toy_space(), flaky, seed=3, q=3, **_FAST)
+    TuningSession(tuner).run(12)
+    failed = [o for o in tuner.history if o.failed]
+    assert failed
+    for o in failed:
+        prior = np.stack([p.y for p in tuner.history[: o.iteration] if not p.failed])
+        assert (o.y <= prior.min(axis=0) + 1e-12).all()
+
+
+def test_threaded_executor_preserves_order_and_results():
+    cfgs = _toy_space().lhs(np.random.default_rng(0), 8)
+    seq = list(BatchExecutor().execute(as_eval_backend(_toy_objective), cfgs))
+    thr = list(ThreadedExecutor(max_workers=4).execute(as_eval_backend(_toy_objective), cfgs))
+    assert [r for r, _ in seq] == [r for r, _ in thr]
+
+
+def test_custom_executor_object():
+    log = []
+
+    class Spy:
+        name = "spy"
+
+        def execute(self, backend, cfgs):
+            log.append(len(cfgs))
+            for c in cfgs:
+                yield backend(c), 0.0
+
+    tuner = RandomLHS(_toy_space(), _toy_objective, seed=0)
+    TuningSession(tuner, executor=Spy()).run(5)
+    assert log == [5]
+    with pytest.raises(ValueError):
+        TuningSession(tuner, executor="warp-drive")
+
+
+# ---------------------------------------------------------------------------
+# Objectives + EvalBackend protocol
+# ---------------------------------------------------------------------------
+def test_objective_spec_validation():
+    spec = speed_recall()
+    assert spec.names == ("speed", "recall")
+    assert spec.directions == ("max", "max")
+    assert spec({"speed": 2.0, "recall": 0.5}) == (2.0, 0.5)
+    with pytest.raises(ValueError):
+        ObjectiveSpec(name="bad", directions=("max",))
+    with pytest.raises(ValueError):
+        ObjectiveSpec(name="bad", directions=("max", "sideways"))
+    with pytest.raises(ValueError):
+        recall_floor(1.5)
+
+
+def test_recall_floor_spec_sets_constraint_mode():
+    t = VDTuner(_toy_space(), _toy_objective, seed=1, objective_spec=recall_floor(0.85), **_FAST)
+    assert t.rlim == 0.85
+    TuningSession(t).run(8)
+    assert sum(1 for o in t.history if o.y[1] >= 0.85) >= 3
+
+
+def test_cost_aware_spec_matches_eq8():
+    spec = cost_aware(eta=2.0)
+    y = spec({"speed": 100.0, "recall": 0.9, "mem_gib": 4.0})
+    assert y == (100.0 / (2.0 * 4.0), 0.9)
+    assert spec.names == ("qpd", "recall")
+    t = VDTuner(_toy_space(), _toy_objective, seed=1, objective_spec=spec, **_FAST)
+    TuningSession(t).run(5)
+    for o in t.history:
+        if not o.failed:
+            assert o.y[0] == pytest.approx(o.raw["speed"] / (2.0 * o.raw["mem_gib"]))
+
+
+def test_transform_and_spec_are_mutually_exclusive():
+    with pytest.raises(ValueError):
+        VDTuner(
+            _toy_space(),
+            _toy_objective,
+            transform=lambda r: (r["speed"], r["recall"]),
+            objective_spec=speed_recall(),
+        )
+
+
+def test_conflicting_rlim_and_spec_rlim_rejected():
+    with pytest.raises(ValueError):
+        VDTuner(_toy_space(), _toy_objective, rlim=0.85, objective_spec=recall_floor(0.92))
+    # agreeing values are fine
+    t = VDTuner(_toy_space(), _toy_objective, rlim=0.9, objective_spec=recall_floor(0.9))
+    assert t.rlim == 0.9
+
+
+def test_as_eval_backend_adapter_captures_failures():
+    def flaky(cfg):
+        if cfg["index_type"] == "A":
+            raise TuningFailure("nope")
+        return _toy_objective(cfg)
+
+    backend = as_eval_backend(flaky)
+    out = backend.evaluate_batch(
+        [_toy_space().default_config("A"), _toy_space().default_config("B")]
+    )
+    assert isinstance(out[0], TuningFailure)
+    assert isinstance(out[1], dict)
+    # objects already exposing evaluate_batch pass through unchanged
+    env = _ToyBatchObjective()
+    assert as_eval_backend(env) is env
+
+
+def test_serve_tuning_env_implements_eval_backend():
+    from repro.tuning.serve_tuner import ServeTuningEnv
+
+    assert issubclass(ServeTuningEnv, SequentialBatchMixin)
+    assert hasattr(ServeTuningEnv, "evaluate_batch")
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trips (deterministic; property tests live in
+# test_checkpoint_resume.py)
+# ---------------------------------------------------------------------------
+def test_state_dict_json_roundtrip_resumes_bit_identically():
+    full = VDTuner(_toy_space(), _toy_objective, seed=7, q=2, **_FAST)
+    TuningSession(full).run(9)
+
+    # interrupt (don't re-budget: a shorter run(n) legitimately clamps the
+    # last round to the budget and so recommends differently)
+    def stopper(session, obs):
+        if session.n_observations >= 5:
+            raise StopSession
+
+    part = VDTuner(_toy_space(), _toy_objective, seed=7, q=2, **_FAST)
+    session = TuningSession(part, callbacks=[stopper]).run(9)
+    state = json.loads(json.dumps(session.state_dict()))
+    fresh = VDTuner(_toy_space(), _toy_objective, seed=7, q=2, **_FAST)
+    TuningSession.restore(state, fresh).run(9)
+    _same_trajectory(fresh, full)
+
+
+def test_restore_carries_bootstrap_observations():
+    first = VDTuner(_toy_space(), _toy_objective, seed=2, rlim=0.8, **_FAST).run(6)
+    full = VDTuner(
+        _toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST
+    )
+    TuningSession(full).run(7)
+
+    part = VDTuner(
+        _toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST
+    )
+    session = TuningSession(part).run(3)
+    state = json.loads(json.dumps(session.state_dict()))
+    # restore() overwrites history wholesale — the §IV-F bootstrap
+    # observations travel inside the checkpoint, not the constructor
+    fresh = VDTuner(_toy_space(), _toy_objective, seed=3, rlim=0.9, **_FAST)
+    TuningSession.restore(state, fresh).run(7)
+    _same_trajectory(fresh, full)
+
+
+def test_restore_rejects_wrong_tuner_or_version():
+    session = TuningSession(RandomLHS(_toy_space(), _toy_objective, seed=0)).run(3)
+    state = session.state_dict()
+    with pytest.raises(ValueError):
+        TuningSession.restore(state, QEHVI(_toy_space(), _toy_objective, seed=0))
+    bad = dict(state, version=99)
+    with pytest.raises(ValueError):
+        TuningSession.restore(bad, RandomLHS(_toy_space(), _toy_objective, seed=0))
+
+
+def test_legacy_step_and_initial_sampling_still_work():
+    tuner = VDTuner(_toy_space(), _toy_objective, seed=1, q=3, **_FAST)
+    tuner._initial_sampling()
+    batch = tuner.step()
+    assert len(batch) == 3
+    assert len({o.index_type for o in batch}) == 1
