@@ -1,8 +1,35 @@
-"""Paper Table VI: tuning-time breakdown (configuration recommendation vs
-workload replay) per method."""
+"""Recommendation overhead benchmarks.
+
+Two views:
+
+* ``run()`` — paper Table VI: tuning-time breakdown (configuration
+  recommendation vs workload replay) per method, driven end-to-end.
+* ``run_ask_overhead()`` — per-iteration ``ask()`` time of the numpy
+  reference path vs the device-resident fused engine (warm-started GP
+  refits) at a fixed history size, for q ∈ {1, 4, 8}. Emits
+  ``BENCH_overhead.json``; the CI smoke job gates the fused path's
+  recommend_time per iteration against a checked-in baseline
+  (``benchmarks/baselines/overhead_ci.json``).
+
+CLI::
+
+    python -m benchmarks.bench_overhead                 # ask-overhead bench
+    python -m benchmarks.bench_overhead --quick         # CI-sized budget
+    python -m benchmarks.bench_overhead --check-speedup # assert >= 3x at q=4
+    python -m benchmarks.bench_overhead --check-against benchmarks/baselines/overhead_ci.json
+    python -m benchmarks.bench_overhead --table-vi      # the paper table
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import sys
+import time
+from typing import Dict, Optional, Sequence
 
+import numpy as np
+
+from repro.core import VDTuner
 from repro.vdms import make_space
 
 from .common import N_ITERS, emit, make_env, run_method
@@ -28,5 +55,169 @@ def run(seed: int = 0, dataset: str = "glove_like"):
     return out
 
 
+# ---------------------------------------------------------------------------
+# ask-time overhead: numpy path vs fused device engine
+# ---------------------------------------------------------------------------
+def _synthetic_history(space, n_obs: int, seed: int):
+    """Deterministic (config, raw-result) pairs covering every index type —
+    a cheap stand-in workload so the benchmark measures recommendation, not
+    evaluation."""
+    rng = np.random.default_rng(seed + 1)
+    cfgs = [space.default_config(t) for t in space.type_names]
+    cfgs += space.sample(rng, max(n_obs - len(cfgs), 0))
+    cfgs = cfgs[:n_obs]
+    out = []
+    for cfg in cfgs:
+        x = space.encode(cfg)
+        h = float(np.sin(7.0 * x).sum())
+        speed = 1000.0 * (1.2 + np.tanh(h))
+        recall = 0.6 + 0.39 * (0.5 + 0.5 * np.tanh(2.0 * x.mean() + 0.3 * h))
+        out.append((cfg, {"speed": speed, "recall": recall, "mem_gib": 1.0 + x.mean()}))
+    return out
+
+
+def _preloaded_tuner(space, history, seed, q, engine, warm_start, n_candidates, mc_samples):
+    tuner = VDTuner(
+        space, seed=seed, q=q, engine=engine, warm_start=warm_start,
+        n_candidates=n_candidates, mc_samples=mc_samples,
+    )
+    for cfg, raw in history:
+        tuner.tell(cfg, raw)
+    return tuner
+
+
+def run_ask_overhead(
+    n_obs: int = 128,
+    qs: Sequence[int] = (1, 4, 8),
+    n_ask: int = 5,
+    seed: int = 0,
+    n_candidates: int = 512,
+    mc_samples: int = 64,
+    warm: bool = True,
+) -> Dict:
+    """Time ``ask()`` on a preloaded history of ``n_obs`` observations.
+
+    The numpy engine runs the pre-PR configuration (cold 120-step GP fits,
+    host-side greedy acquisition); the jax engine runs the fused device path
+    with warm-started refits. Each (engine, q) cell does one untimed
+    compile/warm-up ask, then reports the mean of ``n_ask`` timed asks.
+    """
+    space = make_space()
+    history = _synthetic_history(space, n_obs, seed)
+    engines: Dict[str, Dict] = {}
+    for engine in ("numpy", "jax"):
+        engines[engine] = {}
+        for q in qs:
+            tuner = _preloaded_tuner(
+                space, history, seed, q, engine,
+                warm_start=(engine == "jax" and warm), n_candidates=n_candidates,
+                mc_samples=mc_samples,
+            )
+            t0 = time.perf_counter()
+            tuner.ask(q)  # jit compile (cold-fit program)
+            cold_s = time.perf_counter() - t0
+            tuner.ask(q)  # second warm-up: compiles the warm-fit program too
+            times = []
+            for _ in range(n_ask):
+                t0 = time.perf_counter()
+                tuner.ask(q)
+                times.append(time.perf_counter() - t0)
+            mean_s = float(np.mean(times))
+            engines[engine][f"q{q}"] = {
+                "ask_s_mean": mean_s,
+                "ask_s_cold": float(cold_s),
+                "recommend_s_per_iter": mean_s / q,
+            }
+            emit(
+                f"ask_overhead/{engine}/q{q}", mean_s / q * 1e6,
+                f"ask={mean_s*1e3:.1f}ms;cold={cold_s*1e3:.0f}ms;n={n_obs}",
+            )
+    speedups = {
+        f"q{q}": (
+            engines["numpy"][f"q{q}"]["recommend_s_per_iter"]
+            / engines["jax"][f"q{q}"]["recommend_s_per_iter"]
+        )
+        for q in qs
+    }
+    return {
+        "schema": 1,
+        "n_obs": n_obs,
+        "n_ask": n_ask,
+        "n_candidates": n_candidates,
+        "mc_samples": mc_samples,
+        "seed": seed,
+        "warm_start": warm,
+        "engines": engines,
+        "speedup_per_iter": speedups,
+    }
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--table-vi", action="store_true", help="run the paper Table VI breakdown")
+    p.add_argument("--n-obs", type=int, default=128)
+    p.add_argument("--qs", type=int, nargs="+", default=[1, 4, 8])
+    p.add_argument("--n-ask", type=int, default=5)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--n-candidates", type=int, default=512)
+    p.add_argument("--mc-samples", type=int, default=64)
+    p.add_argument("--no-warm", action="store_true", help="disable warm-started GP refits")
+    p.add_argument("--quick", action="store_true", help="CI-sized budget (n_obs=64, q in {1,4}, 3 asks)")
+    p.add_argument("--json", dest="json_path", default=None, help="write results to this path")
+    p.add_argument(
+        "--check-speedup", action="store_true",
+        help="exit non-zero unless the fused engine is >= 3x faster per iteration at q=4",
+    )
+    p.add_argument(
+        "--check-against", default=None, metavar="BASELINE_JSON",
+        help="exit non-zero if fused q=4 recommend_s_per_iter regresses more than "
+        "2x against the checked-in baseline number",
+    )
+    args = p.parse_args(argv)
+
+    if args.table_vi:
+        print(run(seed=args.seed))
+        return 0
+
+    kw = dict(
+        n_obs=args.n_obs, qs=tuple(args.qs), n_ask=args.n_ask, seed=args.seed,
+        n_candidates=args.n_candidates, mc_samples=args.mc_samples, warm=not args.no_warm,
+    )
+    if args.quick:
+        kw.update(n_obs=64, qs=(1, 4), n_ask=3, n_candidates=256)
+    out = run_ask_overhead(**kw)
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"wrote {args.json_path}")
+
+    rc = 0
+    if args.check_speedup:
+        s = out["speedup_per_iter"].get("q4")
+        if s is None or s < 3.0:
+            print(f"FAIL: fused-engine speedup at q=4 is {s} (< 3x)")
+            rc = 1
+        else:
+            print(f"OK: fused-engine speedup at q=4 is {s:.2f}x (>= 3x)")
+    if args.check_against:
+        with open(args.check_against) as f:
+            baseline = json.load(f)
+        limit = 2.0 * baseline["recommend_s_per_iter_q4"]
+        cell = out["engines"]["jax"].get("q4")
+        if cell is None:
+            print("FAIL: --check-against needs q=4 in --qs")
+            return 1
+        got = cell["recommend_s_per_iter"]
+        if got > limit:
+            print(
+                f"FAIL: fused q=4 recommend_s_per_iter {got*1e3:.1f}ms exceeds 2x "
+                f"baseline ({baseline['recommend_s_per_iter_q4']*1e3:.1f}ms)"
+            )
+            rc = 1
+        else:
+            print(f"OK: fused q=4 recommend_s_per_iter {got*1e3:.1f}ms within 2x baseline")
+    return rc
+
+
 if __name__ == "__main__":
-    print(run())
+    sys.exit(main())

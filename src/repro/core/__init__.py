@@ -6,9 +6,17 @@ The public tuning API is the ask/tell trio: an ask/tell recommender
 checkpoints). See README "Tuning API".
 """
 from .acquisition import cei, ehvi_mc, ei, greedy_select, qehvi_sequential_greedy
+from .acquisition_jax import (
+    cei_jax,
+    ehvi_mc_jax,
+    ei_jax,
+    fused_cei_select,
+    fused_qehvi_select,
+    hvi_2d_jax,
+)
 from .baselines import ALL_BASELINES, DefaultOnly, OpenTunerLike, OtterTuneLike, QEHVI, RandomLHS
 from .budget import SuccessiveAbandon, scores_by_hv_influence
-from .gp import GP
+from .gp import GP, GPParams
 from .hypervolume import hv_2d, hvi_2d
 from .normalize import balanced_base, max_base, npi_normalize
 from .objectives import (
@@ -37,12 +45,14 @@ from .tuner import Observation, TunerBase, TuningFailure, VDTuner
 
 __all__ = [
     "ALL_BASELINES", "BatchExecutor", "Config", "DefaultOnly", "EvalBackend", "GP",
-    "OBJECTIVES", "ObjectiveSpec", "Observation", "OpenTunerLike", "OtterTuneLike",
-    "Param", "QEHVI", "RandomLHS", "SearchSpace", "SequentialBatchMixin",
-    "SequentialExecutor", "StopSession", "SuccessiveAbandon", "ThreadedExecutor",
-    "TunerBase", "TuningFailure", "TuningSession", "VDTuner", "as_eval_backend",
-    "balanced_base", "cei", "checkpoint_every", "cost_aware", "cost_aware_transform",
-    "default_transform", "ehvi_mc", "ei", "greedy_select", "hv_2d", "hvi_2d",
-    "max_base", "non_dominated_mask", "npi_normalize", "pareto_front",
-    "qehvi_sequential_greedy", "recall_floor", "scores_by_hv_influence", "speed_recall",
+    "GPParams", "OBJECTIVES", "ObjectiveSpec", "Observation", "OpenTunerLike",
+    "OtterTuneLike", "Param", "QEHVI", "RandomLHS", "SearchSpace",
+    "SequentialBatchMixin", "SequentialExecutor", "StopSession", "SuccessiveAbandon",
+    "ThreadedExecutor", "TunerBase", "TuningFailure", "TuningSession", "VDTuner",
+    "as_eval_backend", "balanced_base", "cei", "cei_jax", "checkpoint_every",
+    "cost_aware", "cost_aware_transform", "default_transform", "ehvi_mc",
+    "ehvi_mc_jax", "ei", "ei_jax", "fused_cei_select", "fused_qehvi_select",
+    "greedy_select", "hv_2d", "hvi_2d", "hvi_2d_jax", "max_base",
+    "non_dominated_mask", "npi_normalize", "pareto_front", "qehvi_sequential_greedy",
+    "recall_floor", "scores_by_hv_influence", "speed_recall",
 ]

@@ -1,20 +1,17 @@
 """Acquisition functions: MC-EHVI (Eq. 4), EI, constrained EI (Eq. 7), and
-sequential-greedy q-EHVI batch selection with Kriging-believer fantasies."""
+sequential-greedy q-EHVI batch selection with Kriging-believer fantasies.
+
+This is the host-side reference implementation; the device-resident fused
+path lives in :mod:`.acquisition_jax` and is property-tested against it."""
 from __future__ import annotations
 
-import math as _math
 from typing import List
 
 import numpy as np
+from scipy.special import erf as _erf  # vectorized float64 erf
 
 from .hypervolume import hvi_2d
 from .pareto import pareto_front
-
-_erf_vec = np.frompyfunc(_math.erf, 1, 1)
-
-
-def _erf(x: np.ndarray) -> np.ndarray:
-    return _erf_vec(x).astype(np.float64)
 
 
 def _phi(z: np.ndarray) -> np.ndarray:
@@ -23,7 +20,7 @@ def _phi(z: np.ndarray) -> np.ndarray:
 
 
 def _Phi(z: np.ndarray) -> np.ndarray:
-    """Standard normal cdf via erf (vectorized, no scipy dependency)."""
+    """Standard normal cdf via erf."""
     return 0.5 * (1.0 + _erf(np.asarray(z, np.float64) / np.sqrt(2.0)))
 
 

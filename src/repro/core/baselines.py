@@ -25,10 +25,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from .acquisition import ehvi_mc, ei
-from .gp import GP
 from .pareto import non_dominated_mask
 from .space import Config
-from .tuner import Observation, TunerBase
+from .tuner import Observation, TunerBase, _WarmGPMixin
 
 
 class DefaultOnly(TunerBase):
@@ -59,21 +58,24 @@ def _weighted_sum(Y: np.ndarray, w: float = 0.5) -> np.ndarray:
     return w * Y[:, 0] / mx[0] + (1 - w) * Y[:, 1] / mx[1]
 
 
-class OtterTuneLike(TunerBase):
+class OtterTuneLike(_WarmGPMixin, TunerBase):
     name = "ottertune"
 
-    def __init__(self, *args, n_init: int = 10, n_candidates: int = 512, **kw):
+    def __init__(
+        self, *args, n_init: int = 10, n_candidates: int = 512,
+        warm_start: bool = False, gp_warm_fit_steps: int = 30, **kw,
+    ):
         super().__init__(*args, **kw)
         self.n_init = n_init
         self.n_candidates = n_candidates
+        self._init_warm(warm_start, gp_warm_fit_steps)
 
     def ask(self, n: int = 1) -> List[Config]:
         if not self.history:
             return self.space.lhs(self.rng, min(self.n_init, max(n, 1)))
         Y = self.Y
         scal = _weighted_sum(Y)
-        gp = GP(seed=int(self.rng.integers(2**31)))
-        gp.fit(self.X_enc, scal[:, None])
+        gp = self._fit_gp(self.X_enc, scal[:, None])
         cands = self.space.sample(self.rng, self.n_candidates)
         Xc = np.stack([self.space.encode(c) for c in cands])
         mean, std = gp.predict(Xc)
@@ -81,21 +83,24 @@ class OtterTuneLike(TunerBase):
         return [cands[int(np.argmax(acq))]]
 
 
-class QEHVI(TunerBase):
+class QEHVI(_WarmGPMixin, TunerBase):
     name = "qehvi"
 
-    def __init__(self, *args, n_init: int = 10, n_candidates: int = 512, mc_samples: int = 64, **kw):
+    def __init__(
+        self, *args, n_init: int = 10, n_candidates: int = 512, mc_samples: int = 64,
+        warm_start: bool = False, gp_warm_fit_steps: int = 30, **kw,
+    ):
         super().__init__(*args, **kw)
         self.n_init = n_init
         self.n_candidates = n_candidates
         self.mc_samples = mc_samples
+        self._init_warm(warm_start, gp_warm_fit_steps)
 
     def ask(self, n: int = 1) -> List[Config]:
         if not self.history:
             return self.space.lhs(self.rng, min(self.n_init, max(n, 1)))
         Y = self.Y
-        gp = GP(seed=int(self.rng.integers(2**31)))
-        gp.fit(self.X_enc, Y)
+        gp = self._fit_gp(self.X_enc, Y)
         cands = self.space.sample(self.rng, self.n_candidates)
         Xc = np.stack([self.space.encode(c) for c in cands])
         mean, std = gp.predict(Xc)

@@ -11,15 +11,24 @@ Implementation notes
   standardized per-output before fitting, so float32 + adaptive jitter is
   numerically fine at the ≤ a-few-hundred-points scale BO operates at.
 * Training sets grow by one point per iteration. To keep ``jax.jit`` cache
-  hits, X/Y are padded to the next multiple of ``PAD`` and padded rows get a
-  huge observation-noise term, which removes them from the posterior to
-  numerical precision without changing array shapes.
+  hits, X/Y are padded to the next multiple of ``PAD``. Padded rows are
+  *exactly inert*: kernel cross-terms are masked to zero and the pad
+  diagonal is the constant ``_BIG_NOISE``, so the padded posterior equals
+  the unpadded one, growing capacity is an exact block extension of the
+  Cholesky (``sqrt(_BIG_NOISE)`` on the new diagonal), and conditioning on
+  an extra observation is an exact O(n²) bordered-Cholesky append into the
+  first free pad row — ``condition_on`` never refactorizes.
+* ``fit`` supports warm starts: pass ``init`` (the ``GPParams`` of a
+  previous fit) and the optimizer runs ``warm_fit_steps`` Adam steps from
+  there instead of ``fit_steps`` from the default initialization. The
+  tuners thread this state between iterations (and through checkpoints) to
+  cut recommendation overhead.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +45,22 @@ class GPParams:
     log_ls: jnp.ndarray  # (m, d) per-output ARD lengthscales
     log_sf: jnp.ndarray  # (m,)  signal stddev
     log_noise: jnp.ndarray  # (m,) observation noise stddev
+
+    # --- serialization (JSON-compatible; exact f32 round-trip) -----------
+    def to_lists(self) -> Dict[str, Any]:
+        return {
+            "log_ls": np.asarray(self.log_ls, np.float64).tolist(),
+            "log_sf": np.asarray(self.log_sf, np.float64).tolist(),
+            "log_noise": np.asarray(self.log_noise, np.float64).tolist(),
+        }
+
+    @classmethod
+    def from_lists(cls, d: Dict[str, Any]) -> "GPParams":
+        return cls(
+            log_ls=jnp.asarray(np.asarray(d["log_ls"], np.float32)),
+            log_sf=jnp.asarray(np.asarray(d["log_sf"], np.float32)),
+            log_noise=jnp.asarray(np.asarray(d["log_noise"], np.float32)),
+        )
 
 
 @dataclasses.dataclass
@@ -65,22 +90,28 @@ def matern52(a, b, log_ls, log_sf):
     return sf2 * (1.0 + s5 + (5.0 / 3.0) * r * r) * jnp.exp(-s5)
 
 
+def _kernel_matrix(x, mask, log_ls, log_sf, log_noise):
+    """K̃ with exactly-inert padding: masked cross-terms, constant BIG pad
+    diagonal. The Cholesky is block-diagonal [L_real, sqrt(BIG)·I]."""
+    sf2 = jnp.exp(2.0 * log_sf)
+    k = matern52(x, x, log_ls, log_sf) * (mask[:, None] * mask[None, :])
+    noise = (sf2 * _NOISE_FLOOR + jnp.exp(2.0 * log_noise) + _JITTER * sf2) * mask + _BIG_NOISE * (
+        1.0 - mask
+    )
+    return k + jnp.diag(noise)
+
+
 def _nll_single(log_ls, log_sf, log_noise, x, y, mask):
-    """Negative log marginal likelihood for one output (padded rows masked)."""
+    """Negative log marginal likelihood for one output (padded rows inert)."""
     n = x.shape[0]
     log_ls = jnp.clip(log_ls, jnp.log(0.05), jnp.log(20.0))
     log_sf = jnp.clip(log_sf, jnp.log(0.05), jnp.log(4.0))
-    k = matern52(x, x, log_ls, log_sf)
-    sf2 = jnp.exp(2.0 * log_sf)
-    # noise floor & jitter RELATIVE to the signal variance: keeps the f32
-    # Cholesky well-conditioned whatever scale the fit settles on
-    noise = (sf2 * _NOISE_FLOOR + jnp.exp(2.0 * log_noise)) * mask + _BIG_NOISE * (1.0 - mask)
-    k = k + jnp.diag(noise + _JITTER * sf2)
+    k = _kernel_matrix(x, mask, log_ls, log_sf, log_noise)
     chol = jnp.linalg.cholesky(k)
     alpha = jax.scipy.linalg.cho_solve((chol, True), y)
-    # padded rows: y=0 there so the quadratic term contributes ~0; logdet picks
-    # up a constant ~log(BIG_NOISE) per pad row that does not affect gradients
-    # w.r.t. hyperparameters in any material way.
+    # padded rows: y=0 and zero cross-terms, so the quadratic term is exactly
+    # 0 there; logdet picks up the constant 0.5*log(BIG_NOISE) per pad row,
+    # which does not affect gradients w.r.t. hyperparameters.
     nll = 0.5 * y @ alpha + jnp.sum(jnp.log(jnp.diag(chol))) + 0.5 * n * jnp.log(2 * jnp.pi)
     # weak log-normal priors keep hyperparameters in a sane band
     prior = 0.05 * jnp.sum((log_ls - jnp.log(0.5)) ** 2) + 0.05 * log_sf**2 + 0.02 * (
@@ -90,16 +121,13 @@ def _nll_single(log_ls, log_sf, log_noise, x, y, mask):
 
 
 @partial(jax.jit, static_argnames=("steps",))
-def _fit_padded(x, y, mask, key, steps: int = 120):
-    """Adam on the NLL, vmapped over outputs. Returns fitted params + chol/alpha."""
-    n, d = x.shape
-    m = y.shape[1]
+def _fit_padded(x, y, mask, key, ls0, sf0, nz0, steps: int):
+    """Adam on the NLL, vmapped over outputs, starting from (ls0, sf0, nz0)
+    — the default initialization for cold fits, the previous iteration's
+    hyperparameters for warm starts. Returns fitted params + chol/alpha."""
 
-    def fit_one(y_col, key_i):
-        log_ls0 = jnp.log(0.5) * jnp.ones((d,))
-        log_sf0 = jnp.array(0.0)
-        log_noise0 = jnp.array(jnp.log(0.1))
-        params = (log_ls0, log_sf0, log_noise0)
+    def fit_one(y_col, key_i, ls0_i, sf0_i, nz0_i):
+        params = (ls0_i, sf0_i, nz0_i)
         opt_state = jax.tree.map(lambda p: (jnp.zeros_like(p), jnp.zeros_like(p)), params)
         lr = 0.05
 
@@ -132,8 +160,9 @@ def _fit_padded(x, y, mask, key, steps: int = 120):
         log_noise = jnp.clip(log_noise, jnp.log(1e-3), jnp.log(1.0))
         return log_ls, log_sf, log_noise
 
+    m = y.shape[1]
     keys = jax.random.split(key, m)
-    log_ls, log_sf, log_noise = jax.vmap(fit_one, in_axes=(1, 0))(y, keys)
+    log_ls, log_sf, log_noise = jax.vmap(fit_one, in_axes=(1, 0, 0, 0, 0))(y, keys, ls0, sf0, nz0)
     chol, alpha = _posterior_padded(log_ls, log_sf, log_noise, x, y, mask)
     return (log_ls, log_sf, log_noise), chol, alpha
 
@@ -141,13 +170,11 @@ def _fit_padded(x, y, mask, key, steps: int = 120):
 @jax.jit
 def _posterior_padded(log_ls, log_sf, log_noise, x, y, mask):
     """Cholesky + weights per output for fixed hyperparameters (padded rows
-    removed through the big-noise mask). Shared by fit and `condition_on`."""
+    exactly inert). Full refactorization — used after ``fit``; incremental
+    growth goes through ``_append_rows``."""
 
     def posterior_terms(ls_i, sf_i, nz_i, y_col):
-        k = matern52(x, x, ls_i, sf_i)
-        sf2 = jnp.exp(2.0 * sf_i)
-        noise = (sf2 * _NOISE_FLOOR + jnp.exp(2.0 * nz_i)) * mask + _BIG_NOISE * (1.0 - mask)
-        k = k + jnp.diag(noise + _JITTER * sf2)
+        k = _kernel_matrix(x, mask, ls_i, sf_i, nz_i)
         chol = jnp.linalg.cholesky(k)
         alpha = jax.scipy.linalg.cho_solve((chol, True), y_col)
         return chol, alpha
@@ -156,9 +183,9 @@ def _posterior_padded(log_ls, log_sf, log_noise, x, y, mask):
 
 
 @jax.jit
-def _predict_padded(log_ls, log_sf, chol, alpha, x_train, x_test):
+def _predict_padded(log_ls, log_sf, chol, alpha, x_train, mask, x_test):
     def one(ls_i, sf_i, chol_i, alpha_i):
-        ks = matern52(x_test, x_train, ls_i, sf_i)  # (t, n)
+        ks = matern52(x_test, x_train, ls_i, sf_i) * mask[None, :]  # (t, n)
         mean = ks @ alpha_i
         v = jax.scipy.linalg.solve_triangular(chol_i, ks.T, lower=True)  # (n, t)
         kss = jnp.exp(2.0 * sf_i)
@@ -169,6 +196,50 @@ def _predict_padded(log_ls, log_sf, chol, alpha, x_train, x_test):
     return mean.T, var.T  # (t, m)
 
 
+@jax.jit
+def _append_rows(log_ls, log_sf, log_noise, x, y, mask, chol, x_new, y_new):
+    """Insert rows ``x_new`` (k, d) / ``y_new`` (k, m; standardized) into the
+    first free pad slots, updating the Cholesky by one bordered row each —
+    O(n²) per row. Exact (not approximate) because pad rows are inert: the
+    new row's cross-terms to later pad rows are zero, so no row below it
+    changes. Returns the updated (x, y, mask, chol, alpha)."""
+    sf2 = jnp.exp(2.0 * log_sf)
+    row_noise = sf2 * (_NOISE_FLOOR + _JITTER) + jnp.exp(2.0 * log_noise)  # (m,)
+
+    def body(carry, inp):
+        x, y, mask, chol = carry
+        xn, yn = inp
+        r = jnp.sum(mask).astype(jnp.int32)  # first free pad row
+        kv = jax.vmap(lambda ls, sf: matern52(xn[None], x, ls, sf)[0])(log_ls, log_sf)
+        kv = kv * mask[None, :]  # (m, n_pad)
+        w = jax.vmap(lambda L, b: jax.scipy.linalg.solve_triangular(L, b, lower=True))(chol, kv)
+        kself = jax.vmap(lambda ls, sf: matern52(xn[None], xn[None], ls, sf)[0, 0])(log_ls, log_sf)
+        l_rr = jnp.sqrt(jnp.maximum(kself + row_noise - jnp.sum(w * w, axis=1), 1e-10))
+        chol = chol.at[:, r, :].set(w)  # w is 0 at rows >= r (inert pads)
+        chol = chol.at[:, r, r].set(l_rr)
+        x = x.at[r].set(xn)
+        y = y.at[r].set(yn)
+        mask = mask.at[r].set(1.0)
+        return (x, y, mask, chol), 0.0
+
+    (x, y, mask, chol), _ = jax.lax.scan(body, (x, y, mask, chol), (x_new, y_new))
+    alpha = jax.vmap(
+        lambda L, y_col: jax.scipy.linalg.cho_solve((L, True), y_col), in_axes=(0, 1)
+    )(chol, y)
+    return x, y, mask, chol, alpha
+
+
+def _extend_padding(chol: jnp.ndarray, alpha: jnp.ndarray, n_new: int):
+    """Exact capacity growth: block-extend the Cholesky with the constant
+    pad diagonal sqrt(BIG_NOISE) and zero-pad the weights."""
+    m, n, _ = chol.shape
+    c = jnp.zeros((m, n_new, n_new), chol.dtype).at[:, :n, :n].set(chol)
+    idx = jnp.arange(n, n_new)
+    c = c.at[:, idx, idx].set(jnp.sqrt(jnp.asarray(_BIG_NOISE, chol.dtype)))
+    a = jnp.zeros((m, n_new), alpha.dtype).at[:, :n].set(alpha)
+    return c, a
+
+
 class GP:
     """Exact multi-output GP with Matérn-5/2 ARD kernel.
 
@@ -176,12 +247,36 @@ class GP:
     units (standardization handled internally).
     """
 
-    def __init__(self, seed: int = 0, fit_steps: int = 120):
+    def __init__(self, seed: int = 0, fit_steps: int = 120, warm_fit_steps: int = 30):
         self._key = jax.random.PRNGKey(seed)
         self.fit_steps = fit_steps
+        self.warm_fit_steps = warm_fit_steps
         self.state: GPState | None = None
 
-    def fit(self, X: np.ndarray, Y: np.ndarray) -> "GP":
+    @property
+    def params(self) -> GPParams:
+        assert self.state is not None, "fit() first"
+        return self.state.params
+
+    @property
+    def n_real(self) -> int:
+        assert self.state is not None, "fit() first"
+        return int(np.asarray(self.state.mask).sum())
+
+    def fit(
+        self,
+        X: np.ndarray,
+        Y: np.ndarray,
+        init: Optional[GPParams] = None,
+        steps: Optional[int] = None,
+    ) -> "GP":
+        """Fit hyperparameters by Adam on the NLL.
+
+        ``init`` warm-starts the optimizer from a previous fit's
+        hyperparameters (running ``warm_fit_steps`` instead of ``fit_steps``
+        unless ``steps`` overrides); shape-mismatched ``init`` (e.g. a
+        checkpoint from a different space) silently falls back to a cold fit.
+        """
         X = np.asarray(X, np.float32)
         Y = np.asarray(Y, np.float32)
         if Y.ndim == 1:
@@ -198,9 +293,22 @@ class GP:
         xp[:n] = X
         yp[:n] = Yn
         maskp[:n] = 1.0
+        if init is not None and np.asarray(init.log_ls).shape != (m, d):
+            init = None
+        if init is None:
+            ls0 = np.full((m, d), np.log(0.5), np.float32)
+            sf0 = np.zeros((m,), np.float32)
+            nz0 = np.full((m,), np.log(0.1), np.float32)
+            n_steps = self.fit_steps if steps is None else steps
+        else:
+            ls0 = np.asarray(init.log_ls, np.float32)
+            sf0 = np.asarray(init.log_sf, np.float32)
+            nz0 = np.asarray(init.log_noise, np.float32)
+            n_steps = self.warm_fit_steps if steps is None else steps
         self._key, sub = jax.random.split(self._key)
         (log_ls, log_sf, log_noise), chol, alpha = _fit_padded(
-            jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(maskp), sub, steps=self.fit_steps
+            jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(maskp), sub,
+            jnp.asarray(ls0), jnp.asarray(sf0), jnp.asarray(nz0), steps=int(n_steps),
         )
         self.state = GPState(
             params=GPParams(log_ls, log_sf, log_noise),
@@ -219,45 +327,30 @@ class GP:
         s = self.state
         Xt = jnp.asarray(np.asarray(Xt, np.float32))
         mean, var = _predict_padded(
-            s.params.log_ls, s.params.log_sf, s.chol, s.alpha, s.x, Xt
+            s.params.log_ls, s.params.log_sf, s.chol, s.alpha, s.x, s.mask, Xt
         )
         mean = np.asarray(mean) * np.asarray(s.y_std) + np.asarray(s.y_mean)
         std = np.sqrt(np.asarray(var)) * np.asarray(s.y_std)
         return mean, std
 
-    def condition_on(self, X_new: np.ndarray, Y_new: np.ndarray) -> "GP":
-        """Posterior conditioning on extra observations (original Y units)
-        without refitting hyperparameters.
-
-        Used for Kriging-believer fantasies in sequential-greedy batch
-        acquisition: the fitted kernel is kept, the new points join the
-        training set (into free padded rows, re-padding when full), and only
-        the Cholesky/weights are recomputed. Returns a new GP; self is
-        untouched.
-        """
+    def with_capacity(self, n_total: int) -> "GP":
+        """A GP whose padded arrays hold at least ``n_total`` rows (self if
+        they already do). Growth is the exact block extension — no
+        refactorization, identical posterior."""
         assert self.state is not None, "fit() first"
         s = self.state
-        d = s.x.shape[1]
-        m = s.y.shape[1]
-        n_real = int(np.asarray(s.mask).sum())
-        X_new = np.asarray(X_new, np.float32).reshape(-1, d)
-        Y_new = np.asarray(Y_new, np.float32).reshape(-1, m)
-        Yn_new = (Y_new - np.asarray(s.y_mean)) / np.asarray(s.y_std)
-        n_tot = n_real + X_new.shape[0]
-        n_pad = int(np.ceil(n_tot / PAD) * PAD)
-        xp = np.zeros((n_pad, d), np.float32)
-        yp = np.zeros((n_pad, m), np.float32)
-        maskp = np.zeros((n_pad,), np.float32)
-        xp[:n_real] = np.asarray(s.x)[:n_real]
-        yp[:n_real] = np.asarray(s.y)[:n_real]
-        xp[n_real:n_tot] = X_new
-        yp[n_real:n_tot] = Yn_new
-        maskp[:n_tot] = 1.0
-        chol, alpha = _posterior_padded(
-            s.params.log_ls, s.params.log_sf, s.params.log_noise,
-            jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(maskp),
-        )
-        out = GP(fit_steps=self.fit_steps)
+        n_pad = s.x.shape[0]
+        if n_total <= n_pad:
+            return self
+        n_new = int(np.ceil(n_total / PAD) * PAD)
+        xp = np.zeros((n_new, s.x.shape[1]), np.float32)
+        yp = np.zeros((n_new, s.y.shape[1]), np.float32)
+        maskp = np.zeros((n_new,), np.float32)
+        xp[:n_pad] = np.asarray(s.x)
+        yp[:n_pad] = np.asarray(s.y)
+        maskp[:n_pad] = np.asarray(s.mask)
+        chol, alpha = _extend_padding(s.chol, s.alpha, n_new)
+        out = GP(fit_steps=self.fit_steps, warm_fit_steps=self.warm_fit_steps)
         out._key = self._key
         out.state = GPState(
             params=s.params,
@@ -268,5 +361,37 @@ class GP:
             alpha=alpha,
             y_mean=s.y_mean,
             y_std=s.y_std,
+        )
+        return out
+
+    def condition_on(self, X_new: np.ndarray, Y_new: np.ndarray) -> "GP":
+        """Posterior conditioning on extra observations (original Y units)
+        without refitting hyperparameters.
+
+        Used for Kriging-believer fantasies in sequential-greedy batch
+        acquisition: the fitted kernel is kept and each new point is a
+        rank-1 bordered-Cholesky append into a free pad row (O(n²) per
+        output), growing the padding by an exact block extension when the
+        PAD block is full. Returns a new GP; self is untouched.
+        """
+        assert self.state is not None, "fit() first"
+        d = self.state.x.shape[1]
+        m = self.state.y.shape[1]
+        n_real = self.n_real
+        X_new = np.asarray(X_new, np.float32).reshape(-1, d)
+        Y_new = np.asarray(Y_new, np.float32).reshape(-1, m)
+        base = self.with_capacity(n_real + X_new.shape[0])
+        s = base.state
+        Yn_new = (Y_new - np.asarray(s.y_mean)) / np.asarray(s.y_std)
+        x, y, mask, chol, alpha = _append_rows(
+            s.params.log_ls, s.params.log_sf, s.params.log_noise,
+            s.x, s.y, s.mask, s.chol,
+            jnp.asarray(X_new), jnp.asarray(Yn_new),
+        )
+        out = GP(fit_steps=self.fit_steps, warm_fit_steps=self.warm_fit_steps)
+        out._key = self._key
+        out.state = GPState(
+            params=s.params, x=x, y=y, mask=mask, chol=chol, alpha=alpha,
+            y_mean=s.y_mean, y_std=s.y_std,
         )
         return out

@@ -23,7 +23,6 @@ def hv_2d(front: np.ndarray, ref: np.ndarray) -> float:
     order = np.argsort(-f[:, 0], kind="stable")
     f = f[order]
     hv = 0.0
-    prev_f2 = ref[1]
     # sweep from the largest f1: each point adds (f1 - ref1) * (f2 - best f2 so far)
     best_f2 = ref[1]
     for x1, x2 in f:

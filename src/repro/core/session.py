@@ -17,9 +17,11 @@ Lifecycle::
         └── until budget met / tuner exhausted / StopSession ──┘
 
 Checkpointing: ``session.state_dict()`` captures the tuner state (history,
-RNG, polling/abandon state, §IV-F bootstrap observations) plus the session's
-own in-flight state — configurations that were asked but not yet told — as a
-JSON-compatible dict. ``TuningSession.restore(state, tuner)`` resumes
+RNG, polling/abandon state, §IV-F bootstrap observations, and — for
+warm-started tuners — the previous GP fit's hyperparameters, so resumed
+warm refits are bit-identical) plus the session's own in-flight state —
+configurations that were asked but not yet told — as a JSON-compatible
+dict. ``TuningSession.restore(state, tuner)`` resumes
 bit-identically: the pending queue is re-evaluated first (deterministic
 backends, e.g. the cached ``VDMSTuningEnv``, reproduce the same results),
 then recommendation continues from the exact saved RNG state.
@@ -284,6 +286,7 @@ class TuningSession:
         """The recommend/eval time ledger with a stable schema (BENCH json
         ``session`` block)."""
         evals = [e for r in self.rounds for e in r["evals"]]
+        recommend_s = float(sum(e["recommend_s"] for e in evals))
         return {
             "schema": LEDGER_SCHEMA,
             "tuner": self.tuner.name,
@@ -294,7 +297,10 @@ class TuningSession:
                 "n_evals": len(evals),
                 "n_failures": sum(1 for e in evals if e["failed"]),
                 "ask_s": float(sum(r["ask_s"] for r in self.rounds)),
-                "recommend_s": float(sum(e["recommend_s"] for e in evals)),
+                "recommend_s": recommend_s,
+                # per-iteration recommendation overhead — the figure
+                # bench_overhead tracks and CI gates
+                "recommend_s_per_eval": recommend_s / max(len(evals), 1),
                 "eval_s": float(sum(e["eval_s"] for e in evals)),
             },
         }

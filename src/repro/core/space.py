@@ -147,6 +147,63 @@ class SearchSpace:
                 m[self.n_types + j] = True
         return m
 
+    # --- bulk encoded candidates ------------------------------------------
+    def owned_cols(self, index_type: str) -> List[int]:
+        """Indices into ``self._cols`` of the parameters ``index_type`` owns
+        (its index params, then the system params) — ``params_of()`` order."""
+        own = [j for j, (col, owner, p) in enumerate(self._cols) if owner == index_type]
+        sys = [j for j, (col, owner, p) in enumerate(self._cols) if owner is None]
+        return own + sys
+
+    def encoded_template(self, index_type: str) -> np.ndarray:
+        """Encoded row with the type one-hot set and every parameter at its
+        encoded default — the fixed part of any candidate of this type."""
+        x = np.zeros(self.dims, dtype=np.float64)
+        x[self.type_names.index(index_type)] = 1.0
+        for j, (col, owner, p) in enumerate(self._cols):
+            x[self.n_types + j] = p.encode(p.default)
+        return x
+
+    def sample_encoded(
+        self, rng: np.random.Generator, n: int, index_type: str
+    ) -> np.ndarray:
+        """Bulk equivalent of ``sample(rng, n, index_type=...)`` returning raw
+        encoded rows (n, dims). One C-order ``rng.random`` matrix consumes the
+        generator identically to n sequential ``sample`` calls, and
+        ``decode(row, index_type)`` reproduces each sampled config exactly."""
+        cols = self.owned_cols(index_type)
+        U = rng.random((n, len(cols)))
+        X = np.tile(self.encoded_template(index_type), (n, 1))
+        for k, j in enumerate(cols):
+            X[:, self.n_types + j] = U[:, k]
+        return X
+
+    def snap_encoded(self, X: np.ndarray, index_type: str) -> np.ndarray:
+        """Vectorized ``encode(decode(x))`` over the owned columns: the
+        encoded matrix the GP sees after raw candidate rows are snapped to
+        representable parameter values. Matches the scalar
+        ``Param.encode``/``decode`` round-trip bit-for-bit per column."""
+        X = np.array(X, dtype=np.float64, copy=True)
+        for j, (col, owner, p) in enumerate(self._cols):
+            if not (owner is None or owner == index_type):
+                continue
+            u = np.clip(X[:, self.n_types + j], 0.0, 1.0)
+            if p.kind == "float":
+                v = p.low + u * (p.high - p.low)
+                s = (v - p.low) / (p.high - p.low)
+            elif p.kind == "int":
+                v = np.round(p.low + u * (p.high - p.low))
+                s = (v - p.low) / (p.high - p.low)
+            elif p.kind in ("grid", "cat"):
+                nc = len(p.choices)
+                idx = np.minimum((u * nc).astype(np.int64), nc - 1)
+                s = (idx + 0.5) / nc
+            else:  # log_float: math.log/exp differ from np.log/exp by ulps,
+                # so round-trip through the scalar path to stay bit-exact
+                s = np.array([p.encode(p.decode(float(ui))) for ui in u])
+            X[:, self.n_types + j] = s
+        return X
+
     # --- sampling ------------------------------------------------------------
     def sample(
         self, rng: np.random.Generator, n: int, index_type: Optional[str] = None

@@ -44,8 +44,9 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .acquisition import cei, greedy_select, qehvi_sequential_greedy
+from .acquisition_jax import fused_cei_select, fused_qehvi_select
 from .budget import SuccessiveAbandon
-from .gp import GP
+from .gp import GP, GPParams
 from .normalize import npi_normalize
 from .objectives import (
     ObjectiveSpec,
@@ -300,8 +301,63 @@ class TunerBase:
         return self
 
 
-class VDTuner(TunerBase):
-    """Algorithm 1: polling BO with NPI surrogate + successive abandon."""
+class _WarmGPMixin:
+    """Shared GP warm-start machinery for surrogate-based tuners.
+
+    ``warm_start=True`` (the kwarg every surrogate tuner exposes) threads
+    the previous round's fitted hyperparameters into the next fit
+    (``gp_warm_fit_steps`` Adam steps instead of a cold ``fit_steps``-step
+    fit). The warm state is kept on device between rounds and serialized
+    (exact f32 round-trip through JSON) by ``_warm_state`` /
+    ``_load_warm_state``, so checkpointed runs resume bit-identically.
+    """
+
+    def _init_warm(self, warm_start: bool, gp_warm_fit_steps: int) -> None:
+        self.warm_start = warm_start
+        self.gp_warm_fit_steps = gp_warm_fit_steps
+        self._gp_warm: Optional[GPParams] = None
+
+    def _fit_gp(self, X, Y, fit_steps: int = 120) -> GP:
+        gp = GP(
+            seed=int(self.rng.integers(2**31)),
+            fit_steps=fit_steps,
+            warm_fit_steps=self.gp_warm_fit_steps,
+        )
+        gp.fit(X, Y, init=self._gp_warm if self.warm_start else None)
+        if self.warm_start:
+            self._gp_warm = gp.params  # kept on device; serialized lazily
+        return gp
+
+    def _warm_state(self) -> Optional[Dict[str, Any]]:
+        return self._gp_warm.to_lists() if self._gp_warm is not None else None
+
+    def _load_warm_state(self, warm: Optional[Dict[str, Any]]) -> None:
+        self._gp_warm = GPParams.from_lists(warm) if warm is not None else None
+
+    def _extra_state(self) -> Dict[str, Any]:
+        return {"gp_warm": self._warm_state()}
+
+    def _load_extra_state(self, extra: Dict[str, Any]) -> None:
+        self._load_warm_state(extra.get("gp_warm"))
+
+
+class VDTuner(_WarmGPMixin, TunerBase):
+    """Algorithm 1: polling BO with NPI surrogate + successive abandon.
+
+    ``engine`` selects the acquisition implementation: ``"jax"`` (default)
+    runs the whole recommend path — posterior prediction, EHVI/CEI scoring,
+    Kriging-believer fantasies — as one fused jitted call per round;
+    ``"numpy"`` is the host-side reference. Both select identical
+    configuration sequences on seeded runs (regression-tested; scores agree
+    to reduction-order rounding).
+
+    ``warm_start=True`` reuses the previous round's GP hyperparameters as
+    the optimizer init with ``gp_warm_fit_steps`` Adam steps instead of a
+    ``gp_fit_steps``-step cold fit — a large recommend-time saving that
+    slightly perturbs the hyperparameter trajectory, so it is opt-in. The
+    warm state rides in ``state_dict()`` checkpoints, keeping resumes
+    bit-identical.
+    """
 
     name = "vdtuner"
 
@@ -319,14 +375,21 @@ class VDTuner(TunerBase):
         bootstrap_history: Optional[Sequence[Observation]] = None,
         q: int = 1,
         objective_spec: Optional[ObjectiveSpec] = None,
+        engine: str = "jax",
+        warm_start: bool = False,
+        gp_warm_fit_steps: int = 30,
     ):
         super().__init__(space, objective, seed, transform, objective_spec)
         if q < 1:
             raise ValueError(f"q must be >= 1, got {q}")
+        if engine not in ("jax", "numpy"):
+            raise ValueError(f"engine must be 'jax' or 'numpy', got {engine!r}")
         self.abandon = SuccessiveAbandon(space.type_names, window=abandon_window)
         self.n_candidates = n_candidates
         self.mc_samples = mc_samples
         self.gp_fit_steps = gp_fit_steps
+        self.engine = engine
+        self._init_warm(warm_start, gp_warm_fit_steps)
         # user recall-floor preference (constraint mode); an ObjectiveSpec
         # carrying rlim (e.g. objectives.recall_floor) sets it implicitly
         if rlim is not None and self.spec.rlim is not None and rlim != self.spec.rlim:
@@ -369,13 +432,11 @@ class VDTuner(TunerBase):
         # --- NPI normalization + holistic surrogate (lines 15–18) ------
         mode = "balanced" if self.rlim is None else "max"
         Yn, bases = npi_normalize(Y, types, mode=mode)
-        gp = GP(seed=int(self.rng.integers(2**31)), fit_steps=self.gp_fit_steps)
-        gp.fit(self.X_enc, Yn)
+        gp = self._fit_gp(self.X_enc, Yn, fit_steps=self.gp_fit_steps)
 
         # --- poll next index type & recommend (lines 19–21) ------------
         t = self._next_poll_type()
-        cands = self._candidates(t)
-        Xc = np.stack([self.space.encode(c) for c in cands])
+        raw, Xc = self._candidates_encoded(t)
 
         if self.rlim is None:
             # EHVI with ref = 0.5 * base; in normalized space the base is
@@ -383,14 +444,21 @@ class VDTuner(TunerBase):
             # non-dominated set across all types (§IV-C).
             front = Yn[non_dominated_mask(Yn)]
             ref = np.array([0.5, 0.5])
-            idx = qehvi_sequential_greedy(
-                gp, Xc, front, ref, self.rng, q, self.mc_samples
-            )
+            if self.engine == "jax":
+                idx = fused_qehvi_select(gp, Xc, front, ref, self.rng, q, self.mc_samples)
+            else:
+                idx = qehvi_sequential_greedy(
+                    gp, Xc, front, ref, self.rng, q, self.mc_samples
+                )
         else:
             # constraint mode: EI(speed) * Pr(recall > rlim).
-            idx = self._cei_select(gp, Xc, Y, bases, t, q)
+            if self.engine == "jax":
+                best_feasible, rlim_n = self._cei_incumbent(Y, bases, t)
+                idx = fused_cei_select(gp, Xc, best_feasible, rlim_n, q)
+            else:
+                idx = self._cei_select(gp, Xc, Y, bases, t, q)
 
-        return [cands[i] for i in idx]
+        return [self.space.decode(raw[i], index_type=t) for i in idx]
 
     def preferred_executor(self) -> str:
         # q=1 evaluated the warm-up defaults sequentially pre-redesign; q>1
@@ -404,11 +472,13 @@ class VDTuner(TunerBase):
         return {
             "poll_cursor": int(self._poll_cursor),
             "abandon": self.abandon.state_dict(),
+            "gp_warm": self._warm_state(),
         }
 
     def _load_extra_state(self, extra: Dict[str, Any]) -> None:
         self._poll_cursor = int(extra["poll_cursor"])
         self.abandon.load_state_dict(extra["abandon"])
+        self._load_warm_state(extra.get("gp_warm"))
 
     # ------------------------------------------------------------------
     def _initial_sampling(self):
@@ -437,9 +507,22 @@ class VDTuner(TunerBase):
 
     def _candidates(self, t: str) -> List[Config]:
         """Candidate set within type-t's subspace: uniform + perturbations of
-        the type's (and globally) best observed configurations."""
+        the type's (and globally) best observed configurations. Thin wrapper
+        decoding every row of ``_candidates_encoded`` (the recommend path
+        only decodes the chosen rows)."""
+        raw, _ = self._candidates_encoded(t)
+        return [self.space.decode(r, index_type=t) for r in raw]
+
+    def _candidates_encoded(self, t: str) -> Tuple[np.ndarray, np.ndarray]:
+        """Bulk candidate generation: ``(raw, Xc)`` where ``raw`` rows decode
+        to exactly the configs the legacy per-config loop built (identical
+        RNG consumption — the uniform block is one C-order ``rng.random``
+        matrix) and ``Xc = snap_encoded(raw)`` is the encoded matrix the GP
+        scores, equal bit-for-bit to ``np.stack([encode(c) for c in cands])``.
+        """
         n_uniform = self.n_candidates // 2
-        cands = self.space.sample(self.rng, n_uniform, index_type=t)
+        blocks = [self.space.sample_encoded(self.rng, n_uniform, t)]
+        count = n_uniform
         # exploit: perturb non-dominated configs of this type
         ys = self.Y
         nd = non_dominated_mask(ys)
@@ -451,13 +534,39 @@ class VDTuner(TunerBase):
                     max(mine, key=lambda o: o.y[0]).config,
                     max(mine, key=lambda o: o.y[1]).config,
                 ]
-        while len(cands) < self.n_candidates and seeds:
-            base = seeds[len(cands) % len(seeds)]
-            scale = float(self.rng.choice([0.05, 0.1, 0.2]))
-            cands.append(self.space.perturb(self.rng, base, scale=scale))
-        if len(cands) < self.n_candidates:
-            cands += self.space.sample(self.rng, self.n_candidates - len(cands), index_type=t)
-        return cands
+        if seeds:
+            seeds_enc = [self.space.encode(c) for c in seeds]
+            free = self.space.free_mask(t)
+            rows = []
+            # per-candidate draws (choice then normal) keep the generator
+            # stream identical to the legacy space.perturb loop
+            while count + len(rows) < self.n_candidates:
+                base = seeds_enc[(count + len(rows)) % len(seeds_enc)]
+                scale = float(self.rng.choice([0.05, 0.1, 0.2]))
+                noise = self.rng.normal(0.0, scale, size=self.space.dims)
+                rows.append(np.clip(base + noise * free, 0.0, 1.0))
+            if rows:
+                blocks.append(np.stack(rows))
+                count += len(rows)
+        if count < self.n_candidates:
+            blocks.append(self.space.sample_encoded(self.rng, self.n_candidates - count, t))
+        raw = np.concatenate(blocks, axis=0)
+        return raw, self.space.snap_encoded(raw, t)
+
+    def _cei_incumbent(self, Y: np.ndarray, bases: Dict[str, np.ndarray], t: str):
+        """(best feasible speed, recall floor) in the polled type's
+        normalized units — the CEI incumbent state (Eq. 7)."""
+        base_t = bases.get(t, np.array([1.0, 1.0]))
+        rlim_n = self.rlim / base_t[1]
+        feas = Y[:, 1] >= self.rlim
+        if feas.any():
+            spd_n = np.array(
+                [o.y[0] / bases[o.index_type][0] for o, f in zip(self.history, feas) if f]
+            )
+            best_feasible = float(spd_n.max())
+        else:
+            best_feasible = float("-inf")
+        return best_feasible, rlim_n
 
     def _cei_select(
         self,
@@ -474,16 +583,7 @@ class VDTuner(TunerBase):
         the Kriging-believer fantasy conditions the posterior, and — if the
         fantasy clears the recall floor — raises the feasible-speed incumbent.
         """
-        base_t = bases.get(t, np.array([1.0, 1.0]))
-        rlim_n = self.rlim / base_t[1]
-        feas = Y[:, 1] >= self.rlim
-        if feas.any():
-            spd_n = np.array(
-                [o.y[0] / bases[o.index_type][0] for o, f in zip(self.history, feas) if f]
-            )
-            best_feasible = float(spd_n.max())
-        else:
-            best_feasible = float("-inf")
+        best_feasible, rlim_n = self._cei_incumbent(Y, bases, t)
         state = {"best": best_feasible}
 
         def score(mean, std):

@@ -47,15 +47,15 @@ def _storage(x: np.ndarray, bf16: bool) -> jnp.ndarray:
 
 def _member_lists(assign: np.ndarray, nlist: int, cap: int) -> np.ndarray:
     """(nlist, cap) local-id lists, -1 padded; overflow beyond cap is dropped
-    (mirrors real systems' bounded per-cluster scan)."""
+    (mirrors real systems' bounded per-cluster scan). Fully vectorized: one
+    stable argsort + a rank-within-cluster scatter, no per-cluster loop."""
     out = -np.ones((nlist, cap), dtype=np.int32)
     order = np.argsort(assign, kind="stable")
     sa = assign[order]
     starts = np.searchsorted(sa, np.arange(nlist), "left")
-    ends = np.searchsorted(sa, np.arange(nlist), "right")
-    for j in range(nlist):
-        mem = order[starts[j] : ends[j]][:cap]
-        out[j, : len(mem)] = mem
+    pos = np.arange(sa.shape[0]) - starts[sa]  # rank within own cluster
+    keep = pos < cap
+    out[sa[keep], pos[keep]] = order[keep]
     return out
 
 

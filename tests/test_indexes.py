@@ -1,0 +1,44 @@
+"""Index-build helper regressions (no optional deps)."""
+import numpy as np
+
+from repro.vdms.indexes import _ivf_cap, _member_lists
+
+
+def _member_lists_reference(assign, nlist, cap):
+    """Verbatim copy of the pre-vectorization per-cluster loop."""
+    out = -np.ones((nlist, cap), dtype=np.int32)
+    order = np.argsort(assign, kind="stable")
+    sa = assign[order]
+    starts = np.searchsorted(sa, np.arange(nlist), "left")
+    ends = np.searchsorted(sa, np.arange(nlist), "right")
+    for j in range(nlist):
+        mem = order[starts[j] : ends[j]][:cap]
+        out[j, : len(mem)] = mem
+    return out
+
+
+def test_member_lists_matches_loop_reference():
+    rng = np.random.default_rng(0)
+    for _ in range(100):
+        nlist = int(rng.integers(1, 48))
+        n = int(rng.integers(0, 600))
+        cap = int(rng.integers(1, 40))
+        assign = rng.integers(0, nlist, size=n).astype(np.int64)
+        np.testing.assert_array_equal(
+            _member_lists(assign, nlist, cap),
+            _member_lists_reference(assign, nlist, cap),
+        )
+
+
+def test_member_lists_overflow_and_empty_clusters():
+    # cluster 0 overflows cap (extra members dropped), cluster 2 is empty
+    assign = np.array([0, 0, 0, 0, 1, 0], dtype=np.int64)
+    out = _member_lists(assign, nlist=3, cap=2)
+    np.testing.assert_array_equal(out[0], [0, 1])  # stable: first two ids kept
+    np.testing.assert_array_equal(out[1], [4, -1])
+    np.testing.assert_array_equal(out[2], [-1, -1])
+
+
+def test_ivf_cap_bounds_scan_cost():
+    assert _ivf_cap(1024, 16, 4) >= 8
+    assert _ivf_cap(1024, 4, 4) * 4 <= 1024 + 8 * 4
