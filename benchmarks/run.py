@@ -4,11 +4,13 @@
 #   Fig. 8-10  -> bench_ablation       Fig. 12   -> bench_preference
 #   Fig. 13    -> bench_costaware      Table VI  -> bench_overhead
 #   kernels + roofline summary         -> bench_kernels
+#   streaming drift re-tuning          -> bench_streaming
 #
 # REPRO_BENCH_FULL=1 scales to paper-size runs (200 iterations, wall-clock
 # QPS at 32k vectors); the default is a fast deterministic configuration.
 from __future__ import annotations
 
+import os
 import sys
 import time
 import traceback
@@ -17,9 +19,10 @@ import traceback
 def main() -> None:
     from . import (
         bench_ablation, bench_autoconfig, bench_costaware, bench_efficiency,
-        bench_kernels, bench_overhead, bench_preference,
+        bench_kernels, bench_overhead, bench_preference, bench_streaming,
     )
 
+    full = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))
     print("name,us_per_call,derived")
     suites = [
         ("kernels", bench_kernels.run, {}),
@@ -29,6 +32,7 @@ def main() -> None:
         ("preference(Fig12)", bench_preference.run, {}),
         ("costaware(Fig13)", bench_costaware.run, {}),
         ("overhead(TabVI)", bench_overhead.run, {}),
+        ("streaming(drift)", bench_streaming.run, {"quick": not full}),
     ]
     failures = 0
     for name, fn, kw in suites:

@@ -30,10 +30,13 @@ from .objectives import (
     default_transform,
     recall_floor,
     speed_recall,
+    streaming_sustained,
+    sustained_transform,
 )
 from .pareto import non_dominated_mask, pareto_front
 from .session import (
     BatchExecutor,
+    DriftDetector,
     SequentialExecutor,
     StopSession,
     ThreadedExecutor,
@@ -44,9 +47,9 @@ from .space import Config, Param, SearchSpace
 from .tuner import Observation, TunerBase, TuningFailure, VDTuner
 
 __all__ = [
-    "ALL_BASELINES", "BatchExecutor", "Config", "DefaultOnly", "EvalBackend", "GP",
-    "GPParams", "OBJECTIVES", "ObjectiveSpec", "Observation", "OpenTunerLike",
-    "OtterTuneLike", "Param", "QEHVI", "RandomLHS", "SearchSpace",
+    "ALL_BASELINES", "BatchExecutor", "Config", "DefaultOnly", "DriftDetector",
+    "EvalBackend", "GP", "GPParams", "OBJECTIVES", "ObjectiveSpec", "Observation",
+    "OpenTunerLike", "OtterTuneLike", "Param", "QEHVI", "RandomLHS", "SearchSpace",
     "SequentialBatchMixin", "SequentialExecutor", "StopSession", "SuccessiveAbandon",
     "ThreadedExecutor", "TunerBase", "TuningFailure", "TuningSession", "VDTuner",
     "as_eval_backend", "balanced_base", "cei", "cei_jax", "checkpoint_every",
@@ -54,5 +57,6 @@ __all__ = [
     "ehvi_mc_jax", "ei", "ei_jax", "fused_cei_select", "fused_qehvi_select",
     "greedy_select", "hv_2d", "hvi_2d", "hvi_2d_jax", "max_base",
     "non_dominated_mask", "npi_normalize", "pareto_front", "qehvi_sequential_greedy",
-    "recall_floor", "scores_by_hv_influence", "speed_recall",
+    "recall_floor", "scores_by_hv_influence", "speed_recall", "streaming_sustained",
+    "sustained_transform",
 ]

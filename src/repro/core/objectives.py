@@ -119,11 +119,43 @@ def cost_aware(eta: float = 1.0, rlim: float | None = None) -> ObjectiveSpec:
     )
 
 
+def sustained_transform(alpha: float = 1.0) -> Callable[[RawResult], Tuple[float, float]]:
+    """Streaming-replay transform: *sustained* throughput charges the
+    incremental seal / compaction index-build seconds against serving time
+    (weighted by ``alpha``), so configs that seal tiny segments constantly
+    can't fake high search-only QPS. Falls back to plain ``speed`` for raw
+    results without the streaming diagnostics (static measurements)."""
+
+    def tf(result: RawResult) -> Tuple[float, float]:
+        n = float(result.get("n_searches", 0.0))
+        if n <= 0.0:
+            return float(result["speed"]), float(result["recall"])
+        busy = float(result.get("search_s", 0.0)) + alpha * float(result.get("seal_build_s", 0.0))
+        return n / max(busy, 1e-9), float(result["recall"])
+
+    return tf
+
+
+def streaming_sustained(alpha: float = 1.0, rlim: float | None = None) -> ObjectiveSpec:
+    """Streaming regime: maximize (sustained QPS, time-aware recall).
+
+    ``alpha`` is the ingest-overhead weight: 0 reproduces search-only QPS;
+    1 (default) counts every incremental build second as lost serving time.
+    """
+    return ObjectiveSpec(
+        name=f"streaming@{alpha:g}",
+        names=("sustained_qps", "recall"),
+        transform=sustained_transform(alpha),
+        rlim=rlim,
+    )
+
+
 #: Registry of built-in objective factories (name -> factory).
 OBJECTIVES: Dict[str, Callable[..., ObjectiveSpec]] = {
     "speed_recall": speed_recall,
     "recall_floor": recall_floor,
     "cost_aware": cost_aware,
+    "streaming": streaming_sustained,
 }
 
 

@@ -54,6 +54,93 @@ class StopSession(Exception):
 
 
 # ---------------------------------------------------------------------------
+# Workload drift detection (the re-tune trigger)
+# ---------------------------------------------------------------------------
+class DriftDetector:
+    """Detects workload drift from repeated probes of a fixed configuration.
+
+    The deployed incumbent is periodically re-measured through the backend
+    (:meth:`TuningSession.probe_drift`); the first ``warmup`` probes after a
+    (re)set establish the per-metric reference, and a later probe *fires*
+    when any watched metric deviates from its reference by more than
+    ``rel_threshold`` relative — the signal that the optimum may have moved
+    and the session should re-enter BO (:meth:`TuningSession.retune`).
+
+    State is JSON-compatible (``state_dict``/``load_state_dict``) so drift
+    tracking can ride in session checkpoints.
+    """
+
+    def __init__(
+        self,
+        metrics: Sequence[str] = ("speed", "recall"),
+        rel_threshold: float = 0.2,
+        warmup: int = 1,
+    ):
+        if rel_threshold <= 0:
+            raise ValueError(f"rel_threshold must be > 0, got {rel_threshold}")
+        if warmup < 1:
+            raise ValueError(f"warmup must be >= 1, got {warmup}")
+        self.metrics = tuple(metrics)
+        self.rel_threshold = float(rel_threshold)
+        self.warmup = int(warmup)
+        self.reference: Optional[Dict[str, float]] = None
+        self._ref_buf: List[Dict[str, float]] = []
+        self.n_fired = 0
+        self.log: List[Dict[str, Any]] = []
+
+    def observe(self, raw: Dict[str, float]) -> bool:
+        """Feed one probe measurement; returns True when drift fired."""
+        vals = {m: float(raw[m]) for m in self.metrics}
+        if self.reference is None:
+            self._ref_buf.append(vals)
+            if len(self._ref_buf) >= self.warmup:
+                self.reference = {
+                    m: sum(v[m] for v in self._ref_buf) / len(self._ref_buf)
+                    for m in self.metrics
+                }
+                self._ref_buf = []
+            self.log.append({"metrics": vals, "rel": 0.0, "fired": False})
+            return False
+        rel = max(
+            abs(vals[m] - self.reference[m]) / max(abs(self.reference[m]), 1e-12)
+            for m in self.metrics
+        )
+        fired = rel > self.rel_threshold
+        if fired:
+            self.n_fired += 1
+        self.log.append({"metrics": vals, "rel": float(rel), "fired": bool(fired)})
+        return fired
+
+    def reset(self) -> None:
+        """Restart reference collection (call after re-tuning re-deploys)."""
+        self.reference = None
+        self._ref_buf = []
+
+    # --- checkpointing (JSON-compatible) --------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "metrics": list(self.metrics),
+            "rel_threshold": self.rel_threshold,
+            "warmup": self.warmup,
+            "reference": dict(self.reference) if self.reference is not None else None,
+            "ref_buf": [dict(v) for v in self._ref_buf],
+            "n_fired": self.n_fired,
+            "log": copy.deepcopy(self.log),
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]) -> "DriftDetector":
+        self.metrics = tuple(state["metrics"])
+        self.rel_threshold = float(state["rel_threshold"])
+        self.warmup = int(state["warmup"])
+        ref = state.get("reference")
+        self.reference = {k: float(v) for k, v in ref.items()} if ref is not None else None
+        self._ref_buf = [dict(v) for v in state.get("ref_buf", [])]
+        self.n_fired = int(state.get("n_fired", 0))
+        self.log = copy.deepcopy(state.get("log", []))
+        return self
+
+
+# ---------------------------------------------------------------------------
 # Evaluation executors
 # ---------------------------------------------------------------------------
 class SequentialExecutor:
@@ -278,6 +365,82 @@ class TuningSession:
                 "failed": bool(obs.failed),
             }
         )
+
+    # ------------------------------------------------------------------
+    # drift tracking (moving-optimum workloads)
+    # ------------------------------------------------------------------
+    def probe_drift(self, detector: DriftDetector, config: Config) -> bool:
+        """Re-measure the deployed ``config`` through the backend and feed
+        the drift detector. Probes live outside the tuning budget and the
+        recommend/eval ledger — they are deployment monitoring, not BO
+        iterations. An incumbent that now *fails* outright counts as drift.
+        """
+        try:
+            raw = self.backend(config)
+        except TuningFailure:
+            detector.n_fired += 1
+            # finite sentinel keeps detector state/artifacts strict-JSON safe
+            detector.log.append({"metrics": {}, "rel": 1e9, "fired": True, "failed": True})
+            return True
+        return detector.observe(raw)
+
+    def retune(
+        self,
+        n_iters: int = 0,
+        reanchor: Sequence[Config] = (),
+        keep_stale: bool = False,
+    ) -> int:
+        """Re-enter BO after workload drift, warm-started where the knowledge
+        still transfers.
+
+        By default the stale observations are *dropped*: their measured
+        objective values no longer describe the workload, and keeping them
+        would wedge unreachable pre-drift points into the surrogate's front
+        and its NPI normalization. What carries over is exactly what remains
+        valid: the warm-started GP *hyperparameters* (``warm_start=True``
+        tuners resume from the previous fit), while successive-abandon state
+        resets so index types abandoned under the old workload get
+        reconsidered. ``reanchor`` configs — typically the deployed Pareto
+        set — are re-measured first under the current workload as the fresh
+        foundation (they count as fresh observations and flow through the
+        executor/ledger like any round). The evaluation backend decides what
+        re-measurement means (the streaming ``VDMSTuningEnv`` keys its cache
+        by phase, so configurations are genuinely re-evaluated after the
+        workload moved).
+
+        ``keep_stale=True`` instead demotes old observations to §IV-F-style
+        bootstrap entries (they keep feeding the GP and keep every index
+        type "seen" but stop counting against the budget) — the right mode
+        when the objective *scale* is expected to survive the drift.
+
+        Returns the number of stale observations handled; with
+        ``n_iters > 0`` immediately runs until that many fresh evaluations
+        (re-anchors included) have landed.
+        """
+        stale = sum(1 for o in self.tuner.history if not o.bootstrap)
+        if keep_stale:
+            for obs in self.tuner.history:
+                obs.bootstrap = True
+        else:
+            self.tuner.history = []
+        self._pending = []
+        self._pending_recommend_s = 0.0
+        abandon = getattr(self.tuner, "abandon", None)
+        if abandon is not None:
+            self.tuner.abandon = type(abandon)(
+                self.tuner.space.type_names, window=abandon.window
+            )
+        if reanchor:
+            self._pending = [dict(c) for c in reanchor]
+            self._pending_recommend_s = 0.0
+            # a fresh ledger round: re-anchor evals are post-drift work
+            self.rounds.append(
+                {"round": len(self.rounds), "n_asked": len(self._pending), "ask_s": 0.0, "evals": []}
+            )
+            self._drain()
+        if n_iters:
+            self.run(n_iters)
+        return stale
 
     # ------------------------------------------------------------------
     # ledger

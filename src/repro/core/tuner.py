@@ -283,6 +283,50 @@ class TunerBase:
         ok = ys[:, 1] >= rlim
         return float(ys[ok, 0].max()) if ok.any() else float("nan")
 
+    def _deploy_pool(self) -> List[Observation]:
+        """Observations eligible for deployment decisions: fresh (current
+        workload) non-failed ones, falling back to bootstrap history when no
+        fresh observation exists yet (e.g. right after ``retune``)."""
+        ok = [o for o in self.history if not o.failed]
+        fresh = [o for o in ok if not o.bootstrap]
+        return fresh or ok
+
+    def best_config(self, rlim: Optional[float] = None) -> Config:
+        """Deployment incumbent: with a recall floor, the fastest feasible
+        configuration; otherwise the knee of the observed front (max product
+        of per-objective max-normalized values)."""
+        pool = self._deploy_pool()
+        if not pool:
+            raise ValueError("no successful observations yet")
+        ys = np.stack([o.y for o in pool])
+        if rlim is not None:
+            ok = ys[:, 1] >= rlim
+            if ok.any():
+                idx = np.flatnonzero(ok)[int(np.argmax(ys[ok, 0]))]
+                return dict(pool[idx].config)
+        norm = ys.max(axis=0)
+        norm = np.where(norm <= 0, 1.0, norm)
+        return dict(pool[int(np.argmax((ys / norm).prod(axis=1)))].config)
+
+    def pareto_configs(self, max_n: Optional[int] = None) -> List[Config]:
+        """Non-dominated configurations of the deployment pool (the set a
+        deployment would keep live); ``max_n`` keeps the highest-knee-score
+        subset when the front is larger."""
+        pool = self._deploy_pool()
+        if not pool:
+            return []
+        ys = np.stack([o.y for o in pool])
+        nd = non_dominated_mask(ys)
+        front = [o for o, keep in zip(pool, nd) if keep]
+        if max_n is not None and len(front) > max_n:
+            fy = np.stack([o.y for o in front])
+            norm = fy.max(axis=0)
+            norm = np.where(norm <= 0, 1.0, norm)
+            score = (fy / norm).prod(axis=1)
+            keep = np.argsort(-score, kind="stable")[:max_n]
+            front = [front[i] for i in sorted(keep)]
+        return [dict(o.config) for o in front]
+
     # ------------------------------------------------------------------
     # legacy self-driving shim
     # ------------------------------------------------------------------

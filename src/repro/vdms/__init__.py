@@ -1,13 +1,39 @@
 """JAX-native vector data management system (the system under tune)."""
-from .datasets import VectorDataset, exact_topk, make_dataset, recall_at_k
-from .engine import VDMSInstance, batch_signature, measure_batch
-from .indexes import INDEX_TYPES, IndexBundle, build_index, search_index
-from .segments import SegmentPlan, plan_segments, stack_sealed
+from .datasets import (
+    VectorDataset,
+    blend_vectors,
+    dataset_names,
+    exact_topk,
+    exact_topk_masked,
+    make_dataset,
+    recall_at_k,
+    recall_at_k_masked,
+)
+from .engine import LiveVDMS, VDMSInstance, batch_signature, measure_batch
+from .indexes import (
+    INDEX_TYPES,
+    IndexBundle,
+    build_index,
+    concat_bundles,
+    frozen_state,
+    search_index,
+)
+from .segments import SegmentPlan, live_seg_size, plan_segments, stack_sealed
 from .tuning_env import VDMSTuningEnv, make_space
+from .workload import (
+    DRIFT_SCHEDULES,
+    WorkloadTrace,
+    make_trace,
+    replay_trace,
+    time_aware_ground_truth,
+)
 
 __all__ = [
-    "INDEX_TYPES", "IndexBundle", "SegmentPlan", "VDMSInstance", "VDMSTuningEnv",
-    "VectorDataset", "batch_signature", "build_index", "exact_topk", "make_dataset",
-    "make_space", "measure_batch", "plan_segments", "recall_at_k", "search_index",
-    "stack_sealed",
+    "DRIFT_SCHEDULES", "INDEX_TYPES", "IndexBundle", "LiveVDMS", "SegmentPlan",
+    "VDMSInstance", "VDMSTuningEnv", "VectorDataset", "WorkloadTrace",
+    "batch_signature", "blend_vectors", "build_index", "concat_bundles",
+    "dataset_names", "exact_topk", "exact_topk_masked", "frozen_state",
+    "live_seg_size", "make_dataset", "make_space", "make_trace", "measure_batch",
+    "plan_segments", "recall_at_k", "recall_at_k_masked", "replay_trace",
+    "search_index", "stack_sealed", "time_aware_ground_truth",
 ]

@@ -20,14 +20,108 @@ import jax.numpy as jnp
 import numpy as np
 
 from .datasets import VectorDataset, recall_at_k
-from .indexes import IndexBundle, build_index, search_index
-from .segments import plan_segments, stack_sealed
+from .indexes import (
+    IndexBundle,
+    build_index,
+    concat_bundles,
+    frozen_state,
+    replace_segment,
+    search_index,
+)
+from .segments import live_seg_size, plan_segments, stack_sealed
 
 # analytic-mode calibration constants (documented, deterministic)
 _FLOPS_RATE = 5.0e9  # effective CPU distance-eval rate (FLOP/s)
 _CHUNK_OVERHEAD = 2.0e-4  # dispatch overhead per query chunk (s)
 _SEG_OVERHEAD = 5.0e-5  # per-segment merge overhead per chunk (s)
 _STEP_OVERHEAD = 6.0e-6  # per sequential graph-walk step (s)
+
+
+def analytic_chunk_seconds(
+    kind: str,
+    st: Dict[str, Any],
+    arrays: Dict[str, Any],
+    n_sealed: int,
+    seg_size: int,
+    growing_searched: int,
+    dim: int,
+    batch: int,
+) -> float:
+    """Deterministic cost (seconds) of one query chunk — the shared analytic
+    model behind static ``VDMSInstance.measure`` and live replays. Counts the
+    distance evaluations the search pipeline performs for the current segment
+    state; identical arithmetic to the original per-instance model."""
+    d, b, s = dim, batch, seg_size
+    flops = 0.0
+    steps = 0
+    if kind == "FLAT":
+        flops = n_sealed * s * d * 2
+    elif kind in ("IVF_FLAT", "IVF_SQ8", "AUTOINDEX"):
+        nlist = arrays["centroids"].shape[1]
+        cap = arrays["members"].shape[2]
+        bytes_scale = 0.5 if kind == "IVF_SQ8" else 1.0
+        flops = n_sealed * (nlist * d + st["nprobe"] * cap * d * bytes_scale) * 2
+    elif kind == "IVF_PQ":
+        nlist = arrays["centroids"].shape[1]
+        cap = arrays["members"].shape[2]
+        flops = n_sealed * (
+            nlist * d * 2 + st["m"] * st["c"] * (d // st["m"]) * 2 + st["nprobe"] * cap * st["m"]
+        )
+    elif kind == "HNSW":
+        flops = n_sealed * st["ef"] * st["m_links"] * d * 2
+        steps = st["ef"]
+    elif kind == "SCANN":
+        nlist = arrays["centroids"].shape[1]
+        cap = arrays["members"].shape[2]
+        flops = n_sealed * (nlist * d * 2 + st["nprobe"] * cap * d + st["reorder_k"] * d * 2)
+    flops += growing_searched * d * 2  # growing-tail brute force
+    flops *= b  # per chunk of b queries
+    return (
+        flops / _FLOPS_RATE
+        + _CHUNK_OVERHEAD
+        + n_sealed * _SEG_OVERHEAD
+        + steps * _STEP_OVERHEAD
+    )
+
+
+# analytic index-build cost model (deterministic, like the search model):
+# counts the dominant FLOPs of one per-segment build so streaming objectives
+# can charge ingest overhead without wall-clock noise
+_BUILD_RATE = 2.0e10  # effective build FLOP/s (batched kmeans / graph matmuls)
+_BUILD_OVERHEAD = 5.0e-3  # per-build dispatch + allocation overhead (s)
+
+
+def analytic_build_seconds(
+    index_type: str, config: Dict[str, Any], seg_size: int, dim: int, first_build: bool
+) -> float:
+    """Deterministic cost (seconds) of sealing + indexing one segment.
+
+    ``first_build`` additionally charges the one-off shared-calibration
+    training (PQ codebooks) that incremental builds freeze afterwards.
+    """
+    s, d = int(seg_size), int(dim)
+    it = int(config.get("kmeans_iters", 8))
+    flops = float(s * d)  # storage pass
+    if index_type in ("IVF_FLAT", "IVF_SQ8", "IVF_PQ", "SCANN", "AUTOINDEX"):
+        nlist = int(config.get("nlist", max(4, int(np.sqrt(s) * 2))))
+        nlist = int(min(max(nlist, 4), max(s // 8, 4)))
+        flops += it * nlist * s * d * 2
+    if index_type in ("IVF_SQ8", "SCANN"):
+        flops += s * d * 2  # scalar quantization
+    if index_type == "IVF_PQ":
+        m = int(config.get("m", 8))
+        while d % m != 0:
+            m -= 1
+        c = 2 ** int(config.get("nbits", 8))
+        dsub = d // m
+        flops += s * m * c * dsub * 2  # encode
+        if first_build:
+            flops += it * m * c * min(s, 8192) * dsub * 2  # codebook training
+    if index_type == "HNSW":
+        efc = int(min(max(int(config.get("efConstruction", 128)), 16), max(s - 1, 1)))
+        m_links = int(max(4, min(int(config.get("M", 16)), 64)))
+        flops += s * s * d * 2 + s * m_links * efc * d  # exact kNN + pruning
+    return flops / _BUILD_RATE + _BUILD_OVERHEAD
 
 
 def _pipeline_impl(qc, arrays, growing, growing_gids, kind, statics, k_seg, topk):
@@ -133,42 +227,15 @@ class VDMSInstance:
 
     # --- analytic cost model ------------------------------------------
     def _analytic_seconds_per_chunk(self) -> float:
-        st = self.bundle.static
-        plan, d = self.plan, self.dataset.dim
-        b = self.batch
-        s = plan.seg_size
-        kind = self.bundle.kind
-        flops = 0.0
-        steps = 0
-        if kind == "FLAT":
-            flops = plan.n_sealed * s * d * 2
-        elif kind in ("IVF_FLAT", "IVF_SQ8", "AUTOINDEX"):
-            nlist = self.bundle.arrays["centroids"].shape[1]
-            cap = self.bundle.arrays["members"].shape[2]
-            bytes_scale = 0.5 if kind == "IVF_SQ8" else 1.0
-            flops = plan.n_sealed * (nlist * d + st["nprobe"] * cap * d * bytes_scale) * 2
-        elif kind == "IVF_PQ":
-            nlist = self.bundle.arrays["centroids"].shape[1]
-            cap = self.bundle.arrays["members"].shape[2]
-            flops = plan.n_sealed * (
-                nlist * d * 2 + st["m"] * st["c"] * (d // st["m"]) * 2 + st["nprobe"] * cap * st["m"]
-            )
-        elif kind == "HNSW":
-            flops = plan.n_sealed * st["ef"] * st["m_links"] * d * 2
-            steps = st["ef"]
-        elif kind == "SCANN":
-            nlist = self.bundle.arrays["centroids"].shape[1]
-            cap = self.bundle.arrays["members"].shape[2]
-            flops = plan.n_sealed * (
-                nlist * d * 2 + st["nprobe"] * cap * d + st["reorder_k"] * d * 2
-            )
-        flops += self.plan.growing_searched * d * 2  # growing-tail brute force
-        flops *= b  # per chunk of b queries
-        return (
-            flops / _FLOPS_RATE
-            + _CHUNK_OVERHEAD
-            + plan.n_sealed * _SEG_OVERHEAD
-            + steps * _STEP_OVERHEAD
+        return analytic_chunk_seconds(
+            self.bundle.kind,
+            self.bundle.static,
+            self.bundle.arrays,
+            self.plan.n_sealed,
+            self.plan.seg_size,
+            self.plan.growing_searched,
+            self.dataset.dim,
+            self.batch,
         )
 
     # ------------------------------------------------------------------
@@ -212,6 +279,331 @@ class VDMSInstance:
             "build_time": float(self.build_time),
             "compile_time": float(compile_time),
         }
+
+
+# ---------------------------------------------------------------------------
+# live (streaming) instance
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("kind", "statics", "k_seg", "topk"))
+def _live_chunk(q, arrays, alive_g, growing, growing_gids, kind, statics, k_seg, topk):
+    """One query chunk against the live state: sealed segments searched via
+    their indexes, the visible growing tail brute-forced, tombstones and
+    padded slots filtered through the global ``alive_g`` mask at merge time
+    (index -1 maps to the always-dead sentinel slot ``alive_g[-1]``)."""
+    bundle = IndexBundle(kind=kind, arrays=arrays, static=dict(statics))
+    sentinel = alive_g.shape[0] - 1
+    ids, sims = search_index(bundle, q, k_seg)  # (n_seg, B, k_seg)
+    n_seg, b, ks = ids.shape
+    ids2 = jnp.moveaxis(ids, 0, 1).reshape(b, n_seg * ks)
+    sims2 = jnp.moveaxis(sims, 0, 1).reshape(b, n_seg * ks)
+    ok = alive_g[jnp.where(ids2 >= 0, ids2, sentinel)]
+    sims2 = jnp.where(ok, sims2, -jnp.inf)
+    if growing.shape[0] > 0:
+        gs = jnp.dot(q, growing.T.astype(q.dtype), preferred_element_type=jnp.float32)
+        gs = jnp.where(growing_gids[None, :] >= 0, gs, -jnp.inf)
+        gk = min(topk, growing.shape[0])
+        gtop_s, gtop_i = jax.lax.top_k(gs, gk)
+        ids2 = jnp.concatenate([ids2, growing_gids[gtop_i]], axis=1)
+        sims2 = jnp.concatenate([sims2, gtop_s], axis=1)
+    k = min(topk, sims2.shape[1])
+    top_s, top_i = jax.lax.top_k(sims2, k)
+    out = jnp.take_along_axis(ids2, top_i, axis=1)
+    out = jnp.where(jnp.isfinite(top_s), out, -1)
+    if k < topk:
+        out = jnp.pad(out, ((0, 0), (0, topk - k)), constant_values=-1)
+    return out
+
+
+@partial(jax.jit, static_argnames=("topk",))
+def _live_chunk_unsealed(q, growing, growing_gids, topk):
+    """Chunk search before the first seal: brute force over the visible tail."""
+    gs = jnp.dot(q, growing.T.astype(q.dtype), preferred_element_type=jnp.float32)
+    gs = jnp.where(growing_gids[None, :] >= 0, gs, -jnp.inf)
+    k = min(topk, growing.shape[0])
+    top_s, top_i = jax.lax.top_k(gs, k)
+    out = jnp.where(jnp.isfinite(top_s), growing_gids[top_i], -1)
+    if k < topk:
+        out = jnp.pad(out, ((0, 0), (0, topk - k)), constant_values=-1)
+    return out
+
+
+def _bucket(n: int) -> int:
+    """Pad count for the visible growing tail: next power of two >= n (min
+    64), so tail churn recompiles the chunk program only O(log) times."""
+    if n <= 0:
+        return 0
+    b = 64
+    while b < n:
+        b *= 2
+    return b
+
+
+class LiveVDMS:
+    """A *live* VDMS instance: bulk-loaded once, then ingesting timestamped
+    inserts/deletes while serving searches — the streaming regime the paper's
+    system parameters exist for.
+
+    Lifecycle (Milvus-like):
+
+    * inserts append to the growing tail; when the tail reaches the seal
+      size ``ceil(seal_proportion * segment_max_size)`` it is sealed into a
+      fixed-shape segment and indexed *incrementally* (one per-segment build;
+      SQ8/SCANN scales and PQ codebooks are frozen after the first build,
+      like real systems that train quantizers once);
+    * deletes tombstone ids anywhere; a sealed segment whose dead fraction
+      crosses ``compact_threshold`` is compacted — rebuilt in place from its
+      survivors with ``-1``-id padding;
+    * ``graceful_time`` is the bounded-consistency window over the *current*
+      tail: each search scans only the oldest ``(1 - graceful_time)``
+      fraction of the growing tail, so the freshest inserts may be invisible
+      (fast but stale). Recall under that staleness is scored by the
+      replayer against time-aware ground truth.
+    """
+
+    def __init__(
+        self,
+        config: Dict[str, Any],
+        dim: int,
+        capacity: int,
+        seed: int = 0,
+        compact_threshold: float = 0.3,
+    ):
+        self.config = dict(config)
+        self.dim = int(dim)
+        self.capacity = int(capacity)
+        self.seed = int(seed)
+        self.compact_threshold = float(compact_threshold)
+        self.seg_size = live_seg_size(
+            int(config["segment_max_size"]), float(config["seal_proportion"])
+        )
+        self.graceful = float(np.clip(float(config["graceful_time"]), 0.0, 1.0))
+        self.k_seg = int(config["topk_merge_width"])
+        self.batch = int(config["search_batch_size"])
+        self._sys = {
+            "kmeans_iters": int(config["kmeans_iters"]),
+            "storage_bf16": bool(config["storage_bf16"]),
+        }
+        self._key = jax.random.PRNGKey(seed)
+        self.store = np.zeros((self.capacity, self.dim), np.float32)
+        # +1 sentinel slot (always dead): merge maps id -1 there
+        self.alive = np.zeros(self.capacity + 1, dtype=bool)
+        self.gid_seg = np.full(self.capacity, -1, np.int32)  # gid -> sealed segment
+        self.n_total = 0
+        self.tail: List[int] = []
+        self.bundle: IndexBundle | None = None
+        self.seg_gids: List[np.ndarray] = []
+        self._frozen: Dict[str, np.ndarray] | None = None
+        # lifecycle diagnostics
+        self.build_time = 0.0  # bootstrap (bulk-load) build seconds
+        self.seal_build_s = 0.0  # incremental seal + compaction builds (wall)
+        self.seal_build_model_s = 0.0  # same, under the analytic build model
+        self.n_seals = 0
+        self.n_compactions = 0
+        self.seal_history: List[int] = []  # n_sealed after every lifecycle event
+        self._warmed: set = set()  # compiled (n_sealed, bucket, b, topk) shapes
+        self.compile_s = 0.0  # wall-mode warmup (compile) seconds, kept apart
+
+    # --- state views ---------------------------------------------------
+    @property
+    def n_sealed(self) -> int:
+        return len(self.seg_gids)
+
+    @property
+    def n_alive(self) -> int:
+        return int(self.alive[: self.capacity].sum())
+
+    def visible_ids(self) -> np.ndarray:
+        """Sorted global ids of every alive vector (sealed + whole tail)."""
+        return np.flatnonzero(self.alive[: self.capacity]).astype(np.int32)
+
+    def memory_gib(self) -> float:
+        b = len(self.tail) * self.dim * 4
+        if self.bundle is not None:
+            b += self.bundle.memory_bytes()
+        return b / (1024.0**3)
+
+    # --- ingestion -----------------------------------------------------
+    def bootstrap(self, base: np.ndarray) -> None:
+        """Bulk-load the pre-replay corpus (sealing as segments fill); the
+        time spent is the initial ``build_time`` (index-building cost), not
+        replay-time ingest overhead — the seal counters reset afterwards."""
+        t0 = time.perf_counter()
+        self.insert(base)
+        self.build_time += time.perf_counter() - t0
+        self.seal_build_s = 0.0
+        self.seal_build_model_s = 0.0
+
+    def insert(self, vecs: np.ndarray) -> np.ndarray:
+        """Append vectors (d,) or (n, d); seals segments as the tail fills.
+        Returns the assigned global ids."""
+        vecs = np.asarray(vecs, np.float32)
+        if vecs.ndim == 1:
+            vecs = vecs[None]
+        n = vecs.shape[0]
+        if self.n_total + n > self.capacity:
+            raise ValueError(
+                f"capacity exceeded: {self.n_total}+{n} > {self.capacity}"
+            )
+        gids = np.arange(self.n_total, self.n_total + n, dtype=np.int32)
+        self.store[gids] = vecs
+        self.alive[gids] = True
+        self.n_total += n
+        self.tail.extend(int(g) for g in gids)
+        while len(self.tail) >= self.seg_size:
+            self._seal()
+        return gids
+
+    def _build_one(self, ids_row: np.ndarray) -> IndexBundle:
+        """Incremental index build for one packed segment (gid -1 = padding)."""
+        seg = np.zeros((1, self.seg_size, self.dim), np.float32)
+        valid = ids_row >= 0
+        seg[0, valid] = self.store[ids_row[valid]]
+        key = jax.random.fold_in(self._key, self.n_seals + self.n_compactions)
+        first = self._frozen is None
+        self.seal_build_model_s += analytic_build_seconds(
+            self.config["index_type"], self.config, self.seg_size, self.dim, first
+        )
+        b = build_index(
+            key, seg, ids_row[None], self.config["index_type"], self.config,
+            self._sys, frozen=self._frozen,
+        )
+        jax.block_until_ready(list(b.arrays.values()))
+        if first:
+            self._frozen = frozen_state(b)
+        return b
+
+    def _seal(self) -> None:
+        t0 = time.perf_counter()
+        ids = np.asarray(self.tail[: self.seg_size], np.int32)
+        self.tail = self.tail[self.seg_size :]
+        b = self._build_one(ids)
+        self.bundle = b if self.bundle is None else concat_bundles(self.bundle, b)
+        self.gid_seg[ids] = len(self.seg_gids)
+        self.seg_gids.append(ids)
+        self.n_seals += 1
+        self.seal_build_s += time.perf_counter() - t0
+        self.seal_history.append(self.n_sealed)
+
+    def delete(self, gid: int) -> bool:
+        """Tombstone one vector; compacts its sealed segment if the dead
+        fraction crosses the threshold. Returns False for already-dead ids."""
+        gid = int(gid)
+        if gid < 0 or gid >= self.n_total or not self.alive[gid]:
+            return False
+        self.alive[gid] = False
+        z = int(self.gid_seg[gid])
+        if z >= 0:
+            row = self.seg_gids[z]
+            valid = row[row >= 0]
+            dead_frac = 1.0 - float(self.alive[valid].mean()) if valid.size else 1.0
+            if dead_frac > self.compact_threshold:
+                self._compact(z)
+        return True
+
+    def _compact(self, z: int) -> None:
+        t0 = time.perf_counter()
+        row = self.seg_gids[z]
+        valid = row[row >= 0]
+        survivors = valid[self.alive[valid]]
+        new_row = np.full(self.seg_size, -1, np.int32)
+        new_row[: survivors.size] = survivors
+        b = self._build_one(new_row)
+        self.bundle = replace_segment(self.bundle, z, b)
+        self.seg_gids[z] = new_row
+        self.gid_seg[survivors] = z
+        self.n_compactions += 1
+        self.seal_build_s += time.perf_counter() - t0
+        self.seal_history.append(self.n_sealed)
+
+    # --- search --------------------------------------------------------
+    def _visible_tail(self) -> np.ndarray:
+        """Alive gids of the tail slice a query may scan: the oldest
+        ``(1 - graceful_time)`` fraction (newest inserts are skipped —
+        the bounded-consistency window)."""
+        m = int(np.ceil((1.0 - self.graceful) * len(self.tail)))
+        if m == 0:
+            return np.empty(0, np.int32)
+        vis = np.asarray(self.tail[:m], np.int32)
+        return vis[self.alive[vis]]
+
+    def search(
+        self, queries: np.ndarray, topk: int, mode: str = "analytic"
+    ) -> Tuple[np.ndarray, float]:
+        """Search the current visible state. Returns ``(global ids (Q, topk),
+        elapsed seconds)`` — analytic mode charges the deterministic cost
+        model for the live segment state; wall mode times the dispatch."""
+        queries = np.asarray(queries, np.float32)
+        nq = queries.shape[0]
+        b = min(self.batch, max(nq, 1))
+        n_chunks = (nq + b - 1) // b
+        vis = self._visible_tail()
+        nb = _bucket(vis.size)
+        growing = np.zeros((nb, self.dim), np.float32)
+        growing[: vis.size] = self.store[vis]
+        ggids = np.full(nb, -1, np.int32)
+        ggids[: vis.size] = vis
+        growing_j, ggids_j = jnp.asarray(growing), jnp.asarray(ggids)
+        alive_j = jnp.asarray(self.alive)
+
+        def dispatch(chunk: np.ndarray) -> np.ndarray:
+            if self.bundle is None:
+                if nb == 0:
+                    return np.full((b, topk), -1, np.int32)
+                return np.asarray(
+                    jax.block_until_ready(
+                        _live_chunk_unsealed(jnp.asarray(chunk), growing_j, ggids_j, topk)
+                    )
+                )
+            return np.asarray(
+                jax.block_until_ready(
+                    _live_chunk(
+                        jnp.asarray(chunk),
+                        self.bundle.arrays,
+                        alive_j,
+                        growing_j,
+                        ggids_j,
+                        self.bundle.kind,
+                        tuple(sorted(self.bundle.static.items())),
+                        self.k_seg,
+                        topk,
+                    )
+                )
+            )
+
+        shape_key = (self.n_sealed if self.bundle is not None else -1, nb, b, topk)
+        out = np.empty((n_chunks * b, topk), np.int32)
+        elapsed = 0.0
+        for c in range(n_chunks):
+            lo = c * b
+            chunk = queries[lo : lo + b]
+            if chunk.shape[0] < b:  # pad the final chunk by wrapping
+                chunk = np.concatenate([chunk, queries[: b - chunk.shape[0]]], axis=0)
+            if mode != "analytic" and shape_key not in self._warmed:
+                # wall mode keeps compilation apart from the measured region,
+                # mirroring the static path's measured-apart warmup run
+                t0 = time.perf_counter()
+                dispatch(chunk)
+                self.compile_s += time.perf_counter() - t0
+                self._warmed.add(shape_key)
+            t0 = time.perf_counter()
+            ids = dispatch(chunk)
+            elapsed += time.perf_counter() - t0
+            out[lo : lo + b] = ids
+        if mode == "analytic":
+            elapsed = (
+                analytic_chunk_seconds(
+                    self.bundle.kind if self.bundle is not None else "FLAT",
+                    self.bundle.static if self.bundle is not None else {},
+                    self.bundle.arrays if self.bundle is not None else {},
+                    self.n_sealed,
+                    self.seg_size,
+                    int(vis.size),
+                    self.dim,
+                    b,
+                )
+                * n_chunks
+            )
+        return out[:nq], elapsed
 
 
 # ---------------------------------------------------------------------------

@@ -27,6 +27,12 @@ from .kmeans import kmeans, kmeans_l2
 
 INDEX_TYPES = ("FLAT", "IVF_FLAT", "IVF_SQ8", "IVF_PQ", "HNSW", "SCANN", "AUTOINDEX")
 
+#: Bundle arrays shared across segments (calibration state, not per-segment
+#: stacks). Incremental builds freeze these after the first sealed segment —
+#: like real systems that train quantizers once and reuse them for every
+#: later segment — so per-segment bundles stay concatenable.
+SHARED_ARRAYS = ("scale", "codebooks")
+
 
 @dataclasses.dataclass
 class IndexBundle:
@@ -158,14 +164,17 @@ def _search_ivf_flat(q, arrays, *, k_seg: int, nprobe: int):
     )
 
 
-def build_ivf_sq8(key, segs, gids, params, sys) -> IndexBundle:
+def build_ivf_sq8(key, segs, gids, params, sys, frozen=None) -> IndexBundle:
     nlist, cents, assigns = _build_ivf_common(
         key, segs, gids, params["nlist"], sys["kmeans_iters"]
     )
     nprobe = int(min(params["nprobe"], nlist))
     cap = _ivf_cap(segs.shape[1], nlist, nprobe)
     members = np.stack([_member_lists(assigns[z], nlist, cap) for z in range(len(segs))])
-    scale = np.abs(segs).max(axis=(0, 1)) / 127.0 + 1e-12  # (d,) shared scale
+    if frozen is None:
+        scale = np.abs(segs).max(axis=(0, 1)) / 127.0 + 1e-12  # (d,) shared scale
+    else:
+        scale = np.asarray(frozen["scale"], np.float32)
     codes = np.clip(np.round(segs / scale), -127, 127).astype(np.int8)
     return IndexBundle(
         kind="IVF_SQ8",
@@ -207,7 +216,7 @@ def _search_ivf_sq8(q, arrays, *, k_seg: int, nprobe: int):
     )
 
 
-def build_ivf_pq(key, segs, gids, params, sys) -> IndexBundle:
+def build_ivf_pq(key, segs, gids, params, sys, frozen=None) -> IndexBundle:
     n_seg, s, d = segs.shape
     m = int(params["m"])
     while d % m != 0:  # snap to a divisor of d
@@ -221,14 +230,17 @@ def build_ivf_pq(key, segs, gids, params, sys) -> IndexBundle:
     cap = _ivf_cap(s, nlist, nprobe)
     members = np.stack([_member_lists(assigns[z], nlist, cap) for z in range(n_seg)])
     dsub = d // m
-    # shared codebooks across segments (trained on the pooled sample)
-    pool = segs.reshape(-1, m, dsub)
-    sample = pool[:: max(1, pool.shape[0] // 8192)]
-    keys = jax.random.split(jax.random.fold_in(key, 7), m)
-    cb, _ = jax.vmap(
-        lambda kk, xs: kmeans_l2(kk, xs, c, sys["kmeans_iters"])
-    )(keys, jnp.asarray(sample.transpose(1, 0, 2)))  # (m, c, dsub)
-    cb = np.asarray(cb)
+    if frozen is None:
+        # shared codebooks across segments (trained on the pooled sample)
+        pool = segs.reshape(-1, m, dsub)
+        sample = pool[:: max(1, pool.shape[0] // 8192)]
+        keys = jax.random.split(jax.random.fold_in(key, 7), m)
+        cb, _ = jax.vmap(
+            lambda kk, xs: kmeans_l2(kk, xs, c, sys["kmeans_iters"])
+        )(keys, jnp.asarray(sample.transpose(1, 0, 2)))  # (m, c, dsub)
+        cb = np.asarray(cb)
+    else:
+        cb = np.asarray(frozen["codebooks"], np.float32)
     # encode: nearest codeword per subspace
     codes = np.empty((n_seg, s, m), dtype=np.uint8)
     x = segs.reshape(n_seg * s, m, dsub)
@@ -438,14 +450,17 @@ def _search_hnsw(q, arrays, *, k_seg: int, ef: int, m_links: int):
 # =========================================================================
 # SCANN — IVF + int8 score-aware quantized scan + exact re-ranking
 # =========================================================================
-def build_scann(key, segs, gids, params, sys) -> IndexBundle:
+def build_scann(key, segs, gids, params, sys, frozen=None) -> IndexBundle:
     nlist, cents, assigns = _build_ivf_common(
         key, segs, gids, params["nlist"], sys["kmeans_iters"]
     )
     nprobe = int(min(params["nprobe"], nlist))
     cap = _ivf_cap(segs.shape[1], nlist, nprobe)
     members = np.stack([_member_lists(assigns[z], nlist, cap) for z in range(len(segs))])
-    scale = np.abs(segs).max(axis=(0, 1)) / 127.0 + 1e-12
+    if frozen is None:
+        scale = np.abs(segs).max(axis=(0, 1)) / 127.0 + 1e-12
+    else:
+        scale = np.asarray(frozen["scale"], np.float32)
     codes = np.clip(np.round(segs / scale), -127, 127).astype(np.int8)
     reorder_k = int(max(params["reorder_k"], 1))
     return IndexBundle(
@@ -505,24 +520,68 @@ def _search_scann(q, arrays, *, k_seg: int, nprobe: int, reorder_k: int):
 # =========================================================================
 # registry
 # =========================================================================
-def build_index(key, segs, gids, index_type: str, params: Dict, sys: Dict) -> IndexBundle:
+def build_index(
+    key, segs, gids, index_type: str, params: Dict, sys: Dict, frozen: Dict | None = None
+) -> IndexBundle:
+    """Build per-segment indexes for the stacked segments ``(n_seg, S, d)``.
+
+    ``frozen`` (from :func:`frozen_state`) reuses a previous build's shared
+    calibration (SQ8/SCANN scales, PQ codebooks) instead of re-training —
+    the incremental-build path for live instances sealing one segment at a
+    time. ``frozen=None`` reproduces the original from-scratch build exactly.
+    """
     if index_type == "FLAT":
         return build_flat(key, segs, gids, params, sys)
     if index_type == "IVF_FLAT":
         return build_ivf_flat(key, segs, gids, params, sys)
     if index_type == "IVF_SQ8":
-        return build_ivf_sq8(key, segs, gids, params, sys)
+        return build_ivf_sq8(key, segs, gids, params, sys, frozen=frozen)
     if index_type == "IVF_PQ":
-        return build_ivf_pq(key, segs, gids, params, sys)
+        return build_ivf_pq(key, segs, gids, params, sys, frozen=frozen)
     if index_type == "HNSW":
         return build_hnsw(key, segs, gids, params, sys)
     if index_type == "SCANN":
-        return build_scann(key, segs, gids, params, sys)
+        return build_scann(key, segs, gids, params, sys, frozen=frozen)
     if index_type == "AUTOINDEX":
         s = segs.shape[1]
         auto = {"nlist": max(4, int(np.sqrt(s) * 2)), "nprobe": 16}
         return build_ivf_flat(key, segs, gids, auto, sys)
     raise ValueError(index_type)
+
+
+def frozen_state(bundle: IndexBundle) -> Dict[str, np.ndarray]:
+    """Extract the segment-shared calibration arrays to freeze for
+    incremental builds (empty for index families without shared state)."""
+    return {k: np.asarray(bundle.arrays[k]) for k in SHARED_ARRAYS if k in bundle.arrays}
+
+
+def concat_bundles(a: IndexBundle, b: IndexBundle) -> IndexBundle:
+    """Concatenate two bundles of the same kind/statics along the segment
+    axis. Shared calibration arrays must be frozen-compatible and are taken
+    from ``a`` (the incremental-build contract)."""
+    if a.kind != b.kind or a.static != b.static:
+        raise ValueError(
+            f"cannot concat bundles: kind/static mismatch "
+            f"({a.kind}/{a.static} vs {b.kind}/{b.static})"
+        )
+    arrays = {}
+    for k, av in a.arrays.items():
+        arrays[k] = av if k in SHARED_ARRAYS else jnp.concatenate([av, b.arrays[k]], axis=0)
+    return IndexBundle(kind=a.kind, arrays=arrays, static=dict(a.static))
+
+
+def replace_segment(bundle: IndexBundle, z: int, seg_bundle: IndexBundle) -> IndexBundle:
+    """Splice a freshly rebuilt single-segment bundle into position ``z`` —
+    the compaction path (tombstoned vectors dropped, shapes preserved)."""
+    if bundle.kind != seg_bundle.kind or bundle.static != seg_bundle.static:
+        raise ValueError("cannot splice: kind/static mismatch")
+    arrays = {}
+    for k, av in bundle.arrays.items():
+        if k in SHARED_ARRAYS:
+            arrays[k] = av
+        else:
+            arrays[k] = av.at[z].set(seg_bundle.arrays[k][0])
+    return IndexBundle(kind=bundle.kind, arrays=arrays, static=dict(bundle.static))
 
 
 def search_index(bundle: IndexBundle, q: jnp.ndarray, k_seg: int):

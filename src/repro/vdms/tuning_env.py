@@ -13,6 +13,7 @@ from ..core.objectives import TuningFailure
 from ..core.space import Param, SearchSpace
 from .datasets import VectorDataset
 from .engine import VDMSInstance, batch_signature, measure_batch
+from .workload import WorkloadTrace, replay_trace, time_aware_ground_truth
 
 # ---------------------------------------------------------------------------
 # Search space (16 dims: 1 index type + 8 index params + 7 system params)
@@ -77,26 +78,81 @@ class VDMSTuningEnv:
     deterministic cost model (recall is always real). Results are cached by
     canonical config so repeated samples are free (and the replay-time ledger
     still reflects first-evaluation cost, like a real tuning session).
+
+    The ``workload`` axis selects the evaluation regime:
+
+    * ``"static"`` (default) — the original frozen-snapshot evaluation: one
+      ``VDMSInstance`` per config over ``dataset``; bit-identical to the
+      pre-streaming environment.
+    * ``"streaming"`` — each config replays a :class:`WorkloadTrace` through
+      a live instance (``LiveVDMS``): growing-tail ingestion, incremental
+      seal-and-index builds, tombstone deletes with compaction, time-aware
+      recall. ``trace`` is required; ``n_phases`` splits it into equal-op
+      windows and :meth:`set_phase` moves the drifting workload forward —
+      the cache is phase-keyed, so re-measuring a config after the workload
+      moved is a fresh evaluation.
     """
 
     def __init__(
         self,
-        dataset: VectorDataset,
+        dataset: Optional[VectorDataset] = None,
         mode: str = "wall",
         seed: int = 0,
         build_timeout: float = 120.0,
         repeats: int = 3,
         batch_workers: Optional[int] = None,
+        workload: str = "static",
+        trace: Optional[WorkloadTrace] = None,
+        n_phases: int = 1,
+        compact_threshold: float = 0.3,
     ):
+        if workload not in ("static", "streaming"):
+            raise ValueError(f"workload must be 'static' or 'streaming', got {workload!r}")
+        if workload == "static" and dataset is None:
+            raise ValueError("static workload requires dataset=")
+        if workload == "streaming" and trace is None:
+            raise ValueError("streaming workload requires trace=")
         self.dataset = dataset
         self.mode = mode
         self.seed = seed
         self.build_timeout = build_timeout
         self.repeats = repeats
         self.batch_workers = batch_workers  # thread pool size for evaluate_batch
+        self.workload = workload
+        self.trace = trace
+        self.compact_threshold = compact_threshold
+        self._phases = trace.split(n_phases) if workload == "streaming" else []
+        self._phase_gt: List[Optional[Any]] = [None] * len(self._phases)
+        self._phase = 0
         self.cache: Dict[Tuple, Dict[str, float]] = {}
         self.n_evals = 0
         self.total_replay_time = 0.0
+
+    # ------------------------------------------------------------------
+    # streaming phases (the drifting workload's time axis)
+    # ------------------------------------------------------------------
+    @property
+    def n_phases(self) -> int:
+        return len(self._phases)
+
+    @property
+    def phase(self) -> int:
+        return self._phase
+
+    def set_phase(self, phase: int) -> None:
+        """Advance the streaming workload to phase ``phase`` (a window of the
+        trace whose base corpus is the visible state at the window start)."""
+        if self.workload != "streaming":
+            raise ValueError("set_phase is only meaningful for streaming workloads")
+        if not 0 <= phase < len(self._phases):
+            raise ValueError(f"phase must be in [0, {len(self._phases)}), got {phase}")
+        self._phase = int(phase)
+
+    def _cache_key(self, cfg: Dict[str, Any]) -> Tuple:
+        key = self._canon(cfg)
+        if self.workload == "streaming":
+            key = (("__phase__", self._phase),) + key
+        return key
 
     @staticmethod
     def _canon(cfg: Dict[str, Any]) -> Tuple:
@@ -108,17 +164,38 @@ class VDMSTuningEnv:
             items.append((k, v))
         return tuple(items)
 
+    def _measure_one(self, cfg: Dict[str, Any]) -> Dict[str, float]:
+        """Build + measure one config in the active workload regime (raises
+        :class:`TuningFailure` for crashed / timed-out configurations)."""
+        if self.workload == "streaming":
+            phase = self._phases[self._phase]
+            if self._phase_gt[self._phase] is None:
+                self._phase_gt[self._phase] = time_aware_ground_truth(phase)
+            result = replay_trace(
+                phase,
+                cfg,
+                seed=self.seed,
+                mode=self.mode,
+                ground_truth=self._phase_gt[self._phase],
+                compact_threshold=self.compact_threshold,
+            )
+            if result["build_time"] + result["seal_build_s"] > self.build_timeout:
+                raise TuningFailure(f"index builds exceeded {self.build_timeout}s")
+            return result
+        inst = VDMSInstance(self.dataset, cfg, seed=self.seed)
+        if inst.build_time > self.build_timeout:
+            raise TuningFailure(f"index build exceeded {self.build_timeout}s")
+        result = inst.measure(repeats=self.repeats, mode=self.mode)
+        del inst
+        return result
+
     def __call__(self, cfg: Dict[str, Any]) -> Dict[str, float]:
-        key = self._canon(cfg)
+        key = self._cache_key(cfg)
         if key in self.cache:
             return dict(self.cache[key])
         t0 = time.perf_counter()
         try:
-            inst = VDMSInstance(self.dataset, cfg, seed=self.seed)
-            if inst.build_time > self.build_timeout:
-                raise TuningFailure(f"index build exceeded {self.build_timeout}s")
-            result = inst.measure(repeats=self.repeats, mode=self.mode)
-            del inst
+            result = self._measure_one(cfg)
         except TuningFailure:
             raise
         except (ValueError, ZeroDivisionError, RuntimeError) as e:
@@ -156,7 +233,7 @@ class VDMSTuningEnv:
         results: List[Any] = [None] * len(cfgs)
         pending: Dict[Tuple, List[int]] = {}
         for i, cfg in enumerate(cfgs):
-            key = self._canon(cfg)
+            key = self._cache_key(cfg)
             if key in self.cache:
                 results[i] = dict(self.cache[key])
             else:
@@ -181,6 +258,19 @@ class VDMSTuningEnv:
     def _evaluate_misses(
         self, cfgs: Sequence[Dict[str, Any]], max_workers: Optional[int]
     ) -> List[Union[Dict[str, float], TuningFailure]]:
+        if self.workload == "streaming":
+            # replays are stateful trace walks: no cross-config vectorization,
+            # evaluated sequentially (dedupe/caching still applied above)
+            outs: List[Any] = []
+            for cfg in cfgs:
+                try:
+                    outs.append(self._measure_one(cfg))
+                except TuningFailure as e:
+                    outs.append(e)
+                except (ValueError, ZeroDivisionError, RuntimeError) as e:
+                    outs.append(TuningFailure(str(e)))
+            return outs
+
         def build(cfg: Dict[str, Any]) -> Union[VDMSInstance, TuningFailure]:
             try:
                 inst = VDMSInstance(self.dataset, cfg, seed=self.seed)

@@ -1,0 +1,365 @@
+"""Streaming workload traces: timestamped insert/delete/search streams.
+
+A :class:`WorkloadTrace` is the replayable unit: a pre-replay corpus plus an
+operation stream with configurable arrival mixes and a *drift schedule* — a
+map from normalized time to a blend weight that moves the distribution of
+inserted vectors (and queries) from the base dataset toward a drift target
+(by default a different Table-III-style generator, the hardest kind of shift
+for a tuned index configuration).
+
+:func:`replay_trace` drives a :class:`~repro.vdms.engine.LiveVDMS` through a
+trace — growing-tail appends, seal-and-index events, tombstone deletes with
+compaction — and scores recall against *time-aware* ground truth: the exact
+top-k over the vectors visible (inserted and not deleted) at each query's
+timestamp, computed by :func:`time_aware_ground_truth`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .datasets import (
+    blend_vectors,
+    default_dim,
+    exact_topk_masked,
+    raw_vectors,
+    recall_at_k_masked,
+)
+from .engine import LiveVDMS
+
+OP_INSERT, OP_SEARCH, OP_DELETE = 0, 1, 2
+
+#: Named drift schedules: normalized time in [0, 1] -> blend weight in [0, 1].
+DRIFT_SCHEDULES: Dict[str, Callable[[np.ndarray], np.ndarray]] = {
+    "none": lambda t: np.zeros_like(t),
+    "ramp": lambda t: t,
+    "step": lambda t: (t >= 0.5).astype(np.float64),
+    "sine": lambda t: 0.5 - 0.5 * np.cos(2.0 * np.pi * t),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadTrace:
+    """A replayable operation stream over a live VDMS.
+
+    Global vector ids are assignment-ordered: the pre-replay corpus occupies
+    ``0..n_base-1`` and the j-th insert op creates id ``n_base + j``.
+    ``payload[i]`` is the row of :attr:`inserts` / :attr:`queries` for
+    insert/search ops, and the victim *global id* for delete ops.
+    """
+
+    name: str
+    dim: int
+    k: int
+    base: np.ndarray  # (n_base, d) float32, L2-normalized
+    kinds: np.ndarray  # (n_ops,) int8 in {OP_INSERT, OP_SEARCH, OP_DELETE}
+    payload: np.ndarray  # (n_ops,) int32
+    times: np.ndarray  # (n_ops,) float64, nondecreasing, normalized to [0, 1]
+    inserts: np.ndarray  # (n_inserts, d) float32, L2-normalized
+    queries: np.ndarray  # (n_searches, d) float32, L2-normalized
+
+    @property
+    def n_base(self) -> int:
+        return self.base.shape[0]
+
+    @property
+    def n_ops(self) -> int:
+        return self.kinds.shape[0]
+
+    @property
+    def n_inserts(self) -> int:
+        return self.inserts.shape[0]
+
+    @property
+    def n_searches(self) -> int:
+        return self.queries.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.n_base + self.n_inserts
+
+    # ------------------------------------------------------------------
+    def all_vectors(self) -> np.ndarray:
+        """(capacity, d) vectors in global-id order."""
+        return np.concatenate([self.base, self.inserts], axis=0)
+
+    def window(self, lo: int, hi: int) -> "WorkloadTrace":
+        """The sub-trace covering ops ``[lo, hi)``: the prefix's inserts and
+        deletes are folded into the new base corpus (global ids re-assigned
+        densely), so replaying the window starts from exactly the visible
+        state at op ``lo``."""
+        if not 0 <= lo <= hi <= self.n_ops:
+            raise ValueError(f"bad window [{lo}, {hi}) for {self.n_ops} ops")
+        all_vec = self.all_vectors()
+        dead = np.zeros(self.capacity, dtype=bool)
+        n_vis = self.n_base
+        for i in range(lo):
+            if self.kinds[i] == OP_INSERT:
+                n_vis += 1
+            elif self.kinds[i] == OP_DELETE:
+                dead[self.payload[i]] = True
+        vis_ids = np.flatnonzero(~dead[:n_vis])
+        new_gid = np.full(self.capacity, -1, np.int64)
+        new_gid[vis_ids] = np.arange(vis_ids.size)
+        n_base2 = vis_ids.size
+
+        kinds2, payload2, times2 = [], [], []
+        ins_rows: List[int] = []
+        q_rows: List[int] = []
+        for i in range(lo, hi):
+            kind = int(self.kinds[i])
+            p = int(self.payload[i])
+            if kind == OP_INSERT:
+                # insert op number within the full trace is recoverable from
+                # its global id; here we only need the source row order
+                new_gid[self.n_base + p] = n_base2 + len(ins_rows)
+                payload2.append(len(ins_rows))
+                ins_rows.append(p)
+            elif kind == OP_SEARCH:
+                payload2.append(len(q_rows))
+                q_rows.append(p)
+            else:
+                mapped = int(new_gid[p])
+                if mapped < 0:  # victim already gone before the window
+                    continue
+                payload2.append(mapped)
+            kinds2.append(kind)
+            times2.append(float(self.times[i]))
+        return WorkloadTrace(
+            name=f"{self.name}[{lo}:{hi}]",
+            dim=self.dim,
+            k=self.k,
+            base=all_vec[vis_ids],
+            kinds=np.asarray(kinds2, np.int8),
+            payload=np.asarray(payload2, np.int32),
+            times=np.asarray(times2, np.float64),
+            inserts=self.inserts[ins_rows] if ins_rows else np.empty((0, self.dim), np.float32),
+            queries=self.queries[q_rows] if q_rows else np.empty((0, self.dim), np.float32),
+        )
+
+    def split(self, n_phases: int) -> List["WorkloadTrace"]:
+        """Equal-op-count phase windows (the drifting workload's time axis)."""
+        if n_phases < 1:
+            raise ValueError("n_phases must be >= 1")
+        bounds = np.linspace(0, self.n_ops, n_phases + 1).astype(int)
+        return [self.window(int(a), int(b)) for a, b in zip(bounds[:-1], bounds[1:])]
+
+
+# ---------------------------------------------------------------------------
+# generation
+# ---------------------------------------------------------------------------
+def _norm_mix(mix, label: str) -> np.ndarray:
+    arr = np.asarray(mix, np.float64)
+    if arr.shape != (3,) or (arr < 0).any() or arr.sum() <= 0:
+        raise ValueError(f"{label} must be 3 nonnegative weights, got {mix!r}")
+    return arr / arr.sum()
+
+
+def make_trace(
+    name: str,
+    n_base: int = 4096,
+    n_ops: int = 1024,
+    mix: Tuple[float, float, float] = (0.25, 0.70, 0.05),
+    drift: str = "none",
+    drift_to: Optional[str] = None,
+    mix_to: Optional[Tuple[float, float, float]] = None,
+    k: int = 10,
+    dim: Optional[int] = None,
+    seed: int = 0,
+) -> WorkloadTrace:
+    """Generate a streaming trace over a Table-III-style dataset.
+
+    ``mix`` is the (insert, search, delete) arrival mix; op kinds are drawn
+    iid and timestamps from a Poisson-like arrival process (normalized to
+    [0, 1]). ``drift`` names a :data:`DRIFT_SCHEDULES` entry driving two
+    drift axes with the schedule's weight at each op's timestamp:
+
+    * *distribution* drift — inserted vectors and queries blend toward
+      ``drift_to`` (default: a different generator family, the shift that
+      moves which index parameters work);
+    * *arrival-mix* drift — with ``mix_to`` given, the op-kind probabilities
+      interpolate from ``mix`` to ``mix_to`` (e.g. search-heavy to
+      insert-heavy: the insert-pressure shift that moves the seal-policy /
+      graceful-window optimum, paper Fig. 1–2).
+    """
+    if drift not in DRIFT_SCHEDULES:
+        raise ValueError(f"unknown drift {drift!r}; choose from {sorted(DRIFT_SCHEDULES)}")
+    mix_arr = _norm_mix(mix, "mix")
+    mix_to_arr = _norm_mix(mix_to, "mix_to") if mix_to is not None else mix_arr
+    if n_base < 1:
+        raise ValueError("n_base must be >= 1 (deletes need a victim pool)")
+    rng = np.random.default_rng(seed)
+    dim = dim or default_dim(name)
+    if drift_to is None:
+        drift_to = "keyword_like" if name != "keyword_like" else "glove_like"
+    schedule = DRIFT_SCHEDULES[drift]
+
+    gaps = rng.exponential(1.0, size=n_ops)
+    times = np.cumsum(gaps)
+    times = times / times[-1] if n_ops else times
+    w_ops = schedule(times)[:, None]
+    p = (1.0 - w_ops) * mix_arr[None, :] + w_ops * mix_to_arr[None, :]
+    u = rng.random(n_ops)
+    kinds = np.where(u < p[:, 0], OP_INSERT, np.where(u < p[:, 0] + p[:, 1], OP_SEARCH, OP_DELETE)).astype(np.int8)
+
+    base = blend_vectors(raw_vectors(name, rng, n_base, dim), np.zeros((n_base, dim)), np.zeros(n_base))
+
+    ins_idx = np.flatnonzero(kinds == OP_INSERT)
+    q_idx = np.flatnonzero(kinds == OP_SEARCH)
+    n_ins, n_q = ins_idx.size, q_idx.size
+    a_ins = raw_vectors(name, rng, n_ins, dim) if n_ins else np.empty((0, dim))
+    b_ins = raw_vectors(drift_to, rng, n_ins, dim) if n_ins else np.empty((0, dim))
+    a_q = raw_vectors(name, rng, n_q, dim) if n_q else np.empty((0, dim))
+    b_q = raw_vectors(drift_to, rng, n_q, dim) if n_q else np.empty((0, dim))
+    inserts = (blend_vectors(a_ins, b_ins, schedule(times[ins_idx])) if n_ins else np.empty((0, dim), np.float32))
+    queries = (blend_vectors(a_q, b_q, schedule(times[q_idx])) if n_q else np.empty((0, dim), np.float32))
+
+    # payloads: sequential rows for inserts/searches; sampled victims for
+    # deletes (uniform over the currently-alive ids, never repeated)
+    payload = np.zeros(n_ops, np.int32)
+    payload[ins_idx] = np.arange(n_ins, dtype=np.int32)
+    payload[q_idx] = np.arange(n_q, dtype=np.int32)
+    alive: List[int] = list(range(n_base))
+    n_inserted = 0
+    dropped: List[int] = []
+    for i in np.flatnonzero(kinds != OP_SEARCH):
+        if kinds[i] == OP_INSERT:
+            alive.append(n_base + n_inserted)
+            n_inserted += 1
+        elif alive:
+            j = int(rng.integers(len(alive)))
+            payload[i] = alive.pop(j)
+        else:  # victim pool exhausted under a delete-heavy mix: drop the op
+            dropped.append(int(i))
+    if dropped:
+        keep = np.ones(n_ops, dtype=bool)
+        keep[dropped] = False
+        kinds, payload, times = kinds[keep], payload[keep], times[keep]
+    return WorkloadTrace(
+        name=f"{name}/{drift}->{drift_to}",
+        dim=dim,
+        k=k,
+        base=base,
+        kinds=kinds,
+        payload=payload,
+        times=times,
+        inserts=inserts,
+        queries=queries,
+    )
+
+
+# ---------------------------------------------------------------------------
+# time-aware ground truth
+# ---------------------------------------------------------------------------
+def time_aware_ground_truth(trace: WorkloadTrace, k: Optional[int] = None) -> np.ndarray:
+    """Exact top-k for every search op over the vectors *visible at its
+    timestamp*: inserted before it and not yet deleted. Rows are ordered by
+    search op (aligned with ``trace.queries``); short visible sets pad with
+    -1. This is the oracle the engine's bounded-consistency searches are
+    scored against.
+    """
+    k = k or trace.k
+    all_vec = trace.all_vectors()
+    dead = np.zeros(trace.capacity, dtype=bool)
+    n_vis = trace.n_base
+    out = -np.ones((trace.n_searches, k), np.int32)
+    pending: List[int] = []  # search payload rows awaiting the current state
+
+    def flush():
+        if not pending:
+            return
+        rows = np.asarray(pending, np.int64)
+        out[rows] = exact_topk_masked(all_vec[:n_vis], trace.queries[rows], dead[:n_vis], k)
+        pending.clear()
+
+    for i in range(trace.n_ops):
+        kind = int(trace.kinds[i])
+        if kind == OP_SEARCH:
+            pending.append(int(trace.payload[i]))
+            continue
+        flush()
+        if kind == OP_INSERT:
+            n_vis += 1
+        else:
+            dead[trace.payload[i]] = True
+    flush()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# replay
+# ---------------------------------------------------------------------------
+def replay_trace(
+    trace: WorkloadTrace,
+    config: Dict[str, Any],
+    seed: int = 0,
+    mode: str = "analytic",
+    topk: Optional[int] = None,
+    ground_truth: Optional[np.ndarray] = None,
+    compact_threshold: float = 0.3,
+    with_live: bool = False,
+):
+    """Replay a trace under one configuration and measure the paper's
+    objectives in the streaming regime.
+
+    Returns a flat float dict (an ``EvalBackend`` raw result): ``speed`` is
+    search throughput (consecutive searches are micro-batched, insert/delete
+    barriers respected), ``recall`` is time-aware recall@k against
+    :func:`time_aware_ground_truth`, ``mem_gib`` is the peak footprint, and
+    the ingest side reports ``seal_build_s`` (incremental seal + compaction
+    builds), ``n_seals`` and ``n_compactions``. With ``with_live=True`` also
+    returns the finished :class:`LiveVDMS` (diagnostics: seal history,
+    visible ids) as a second value.
+    """
+    k = topk or trace.k
+    gt = ground_truth if ground_truth is not None else time_aware_ground_truth(trace, k)
+    live = LiveVDMS(config, trace.dim, trace.capacity, seed=seed, compact_threshold=compact_threshold)
+    live.bootstrap(trace.base)
+    preds = -np.ones((trace.n_searches, k), np.int32)
+    search_s = 0.0
+    peak_mem = live.memory_gib()
+    pending: List[int] = []
+
+    def flush():
+        nonlocal search_s
+        if not pending:
+            return
+        rows = np.asarray(pending, np.int64)
+        ids, secs = live.search(trace.queries[rows], k, mode=mode)
+        preds[rows] = ids
+        search_s += secs
+        pending.clear()
+
+    for i in range(trace.n_ops):
+        kind = int(trace.kinds[i])
+        if kind == OP_SEARCH:
+            pending.append(int(trace.payload[i]))
+            continue
+        flush()
+        if kind == OP_INSERT:
+            live.insert(trace.inserts[trace.payload[i]])
+        else:
+            live.delete(int(trace.payload[i]))
+        peak_mem = max(peak_mem, live.memory_gib())
+    flush()
+    peak_mem = max(peak_mem, live.memory_gib())
+
+    n_searches = trace.n_searches
+    # analytic mode charges the deterministic build model for ingest overhead
+    # (wall-clock build noise would leak into the tuning objective otherwise)
+    seal_build = live.seal_build_model_s if mode == "analytic" else live.seal_build_s
+    result = {
+        "speed": float(n_searches / max(search_s, 1e-9)),
+        "recall": float(recall_at_k_masked(preds[:, : trace.k], gt[:, : trace.k])),
+        "mem_gib": float(peak_mem),
+        "build_time": float(live.build_time),
+        "compile_time": float(live.compile_s),
+        "seal_build_s": float(seal_build),
+        "search_s": float(search_s),
+        "n_searches": float(n_searches),
+        "n_seals": float(live.n_seals),
+        "n_compactions": float(live.n_compactions),
+    }
+    return (result, live) if with_live else result

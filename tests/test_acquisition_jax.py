@@ -155,9 +155,7 @@ def test_ei_cei_jax_match_numpy(best):
         got_ei = np.asarray(ei_jax(mean, std, 1.0))
         got_cei = np.asarray(cei_jax(mean, std, mean_r, std_r, best, 0.9))
     np.testing.assert_allclose(got_ei, ei(mean, std, 1.0), rtol=1e-9, atol=1e-15)
-    np.testing.assert_allclose(
-        got_cei, cei(mean, std, mean_r, std_r, best, 0.9), rtol=1e-9, atol=1e-15
-    )
+    np.testing.assert_allclose(got_cei, cei(mean, std, mean_r, std_r, best, 0.9), rtol=1e-9, atol=1e-15)
 
 
 # ---------------------------------------------------------------------------
@@ -165,9 +163,7 @@ def test_ei_cei_jax_match_numpy(best):
 # ---------------------------------------------------------------------------
 def _full_refactorization(gp):
     s = gp.state
-    return _posterior_padded(
-        s.params.log_ls, s.params.log_sf, s.params.log_noise, s.x, s.y, s.mask
-    )
+    return _posterior_padded(s.params.log_ls, s.params.log_sf, s.params.log_noise, s.x, s.y, s.mask)
 
 
 @pytest.mark.parametrize("n0,k", [(20, 1), (20, 5), (30, 4), (32, 3)], ids=str)
@@ -187,8 +183,14 @@ def test_rank1_condition_matches_full_refactorization(n0, k):
     m1, s1 = g2.predict(Xt)
     g3 = GP(seed=0)
     g3.state = type(g2.state)(
-        params=g2.state.params, x=g2.state.x, y=g2.state.y, mask=g2.state.mask,
-        chol=chol_full, alpha=alpha_full, y_mean=g2.state.y_mean, y_std=g2.state.y_std,
+        params=g2.state.params,
+        x=g2.state.x,
+        y=g2.state.y,
+        mask=g2.state.mask,
+        chol=chol_full,
+        alpha=alpha_full,
+        y_mean=g2.state.y_mean,
+        y_std=g2.state.y_std,
     )
     m2, s2 = g3.predict(Xt)
     np.testing.assert_allclose(m1, m2, rtol=1e-3, atol=1e-3)
@@ -213,8 +215,15 @@ def test_with_capacity_is_exact_and_preserves_posterior():
 # ---------------------------------------------------------------------------
 def _run(engine, q, rlim, warm=False, n=12, seed=5):
     t = VDTuner(
-        _toy_space(), _toy_objective, seed=seed, abandon_window=6, rlim=rlim, q=q,
-        engine=engine, warm_start=warm, **_FAST,
+        _toy_space(),
+        _toy_objective,
+        seed=seed,
+        abandon_window=6,
+        rlim=rlim,
+        q=q,
+        engine=engine,
+        warm_start=warm,
+        **_FAST,
     )
     return t.run(n)
 
@@ -266,9 +275,7 @@ def test_warm_start_threads_state_and_checkpoints():
 @pytest.mark.parametrize("q", [1, 4], ids=["q1", "q4"])
 def test_warm_start_resume_is_bit_identical(q):
     def make():
-        return VDTuner(
-            _toy_space(), _toy_objective, seed=7, q=q, warm_start=True, **_FAST
-        )
+        return VDTuner(_toy_space(), _toy_objective, seed=7, q=q, warm_start=True, **_FAST)
 
     full = make()
     TuningSession(full).run(9)
@@ -289,15 +296,11 @@ def test_warm_start_resume_is_bit_identical(q):
 def test_baseline_warm_start_threads_and_checkpoints():
     from repro.core import OtterTuneLike
 
-    tuner = OtterTuneLike(
-        _toy_space(), _toy_objective, seed=2, n_init=4, n_candidates=32, warm_start=True
-    )
+    tuner = OtterTuneLike(_toy_space(), _toy_objective, seed=2, n_init=4, n_candidates=32, warm_start=True)
     tuner.run(7)
     assert tuner._gp_warm is not None
     state = json.loads(json.dumps(tuner.state_dict()))
-    fresh = OtterTuneLike(
-        _toy_space(), _toy_objective, seed=2, n_init=4, n_candidates=32, warm_start=True
-    )
+    fresh = OtterTuneLike(_toy_space(), _toy_objective, seed=2, n_init=4, n_candidates=32, warm_start=True)
     fresh.load_state_dict(state)
     assert fresh._gp_warm.to_lists() == state["extra"]["gp_warm"]
 
@@ -352,7 +355,5 @@ def test_bulk_candidates_match_legacy_loop_and_rng_stream():
 def test_snap_encoded_matches_scalar_roundtrip():
     tuner = VDTuner(_toy_space(), _toy_objective, seed=7, **_FAST).run(6)
     raw, Xc = tuner._candidates_encoded("A")
-    want = np.stack(
-        [tuner.space.encode(tuner.space.decode(r, index_type="A")) for r in raw]
-    )
+    want = np.stack([tuner.space.encode(tuner.space.decode(r, index_type="A")) for r in raw])
     np.testing.assert_array_equal(Xc, want)

@@ -13,9 +13,7 @@ from repro.core import GP, cei, cei_jax, ehvi_mc, ehvi_mc_jax, hvi_2d, hvi_2d_ja
 from repro.core.gp import _posterior_padded
 
 points2d = st.lists(
-    st.tuples(
-        st.floats(0.01, 100.0, allow_nan=False), st.floats(0.01, 100.0, allow_nan=False)
-    ),
+    st.tuples(st.floats(0.01, 100.0, allow_nan=False), st.floats(0.01, 100.0, allow_nan=False)),
     min_size=1,
     max_size=16,
 ).map(lambda ps: np.array(ps, dtype=np.float64))
@@ -97,7 +95,5 @@ def test_rank1_cholesky_matches_full_refactorization(seed, n0, k):
     mean, _ = gp.predict(Xn)
     g2 = gp.condition_on(Xn, mean)
     s = g2.state
-    chol_full, _ = _posterior_padded(
-        s.params.log_ls, s.params.log_sf, s.params.log_noise, s.x, s.y, s.mask
-    )
+    chol_full, _ = _posterior_padded(s.params.log_ls, s.params.log_sf, s.params.log_noise, s.x, s.y, s.mask)
     np.testing.assert_allclose(np.asarray(s.chol), np.asarray(chol_full), atol=2e-4)

@@ -13,8 +13,16 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    GP, Param, SearchSpace, TuningFailure, VDTuner, cei, ehvi_mc,
-    non_dominated_mask, npi_normalize, qehvi_sequential_greedy,
+    GP,
+    Param,
+    SearchSpace,
+    TuningFailure,
+    VDTuner,
+    cei,
+    ehvi_mc,
+    non_dominated_mask,
+    npi_normalize,
+    qehvi_sequential_greedy,
 )
 from repro.vdms import VDMSTuningEnv, make_space
 
@@ -65,9 +73,7 @@ def _legacy_step(self):
         rlim_n = self.rlim / base_t[1]
         feas = Y[:, 1] >= self.rlim
         if feas.any():
-            spd_n = np.array(
-                [o.y[0] / bases[o.index_type][0] for o, f in zip(self.history, feas) if f]
-            )
+            spd_n = np.array([o.y[0] / bases[o.index_type][0] for o, f in zip(self.history, feas) if f])
             best_feasible = float(spd_n.max())
         else:
             best_feasible = float("-inf")
@@ -85,9 +91,7 @@ def test_q1_trajectory_identical_to_legacy(rlim):
     ref._initial_sampling()
     for _ in range(8):
         _legacy_step(ref)
-    new = VDTuner(
-        _toy_space(), _toy_objective, seed=5, abandon_window=6, rlim=rlim, q=1
-    ).run(len(ref.history))
+    new = VDTuner(_toy_space(), _toy_objective, seed=5, abandon_window=6, rlim=rlim, q=1).run(len(ref.history))
     assert [o.config for o in new.history] == [o.config for o in ref.history]
     assert np.array_equal(new.Y, ref.Y)
 

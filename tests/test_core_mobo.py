@@ -7,18 +7,29 @@ pytest.importorskip("hypothesis", reason="optional test dep; pip install -e .[te
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
-    GP, Param, SearchSpace, SuccessiveAbandon, VDTuner, RandomLHS, balanced_base,
-    cei, ehvi_mc, ei, hv_2d, hvi_2d, non_dominated_mask, npi_normalize,
-    pareto_front, scores_by_hv_influence,
+    GP,
+    Param,
+    SearchSpace,
+    SuccessiveAbandon,
+    VDTuner,
+    RandomLHS,
+    balanced_base,
+    cei,
+    ehvi_mc,
+    ei,
+    hv_2d,
+    hvi_2d,
+    non_dominated_mask,
+    npi_normalize,
+    pareto_front,
+    scores_by_hv_influence,
 )
 
 # ---------------------------------------------------------------------------
 # hypervolume / pareto
 # ---------------------------------------------------------------------------
 points2d = st.lists(
-    st.tuples(
-        st.floats(0.01, 100.0, allow_nan=False), st.floats(0.01, 100.0, allow_nan=False)
-    ),
+    st.tuples(st.floats(0.01, 100.0, allow_nan=False), st.floats(0.01, 100.0, allow_nan=False)),
     min_size=1,
     max_size=24,
 ).map(lambda ps: np.array(ps, dtype=np.float64))
@@ -103,9 +114,7 @@ def test_gp_multi_output_independent():
 # ---------------------------------------------------------------------------
 def test_ei_properties():
     # higher mean -> higher EI; zero std + mean below best -> 0
-    assert ei(np.array([2.0]), np.array([0.1]), best=1.0) > ei(
-        np.array([1.5]), np.array([0.1]), best=1.0
-    )
+    assert ei(np.array([2.0]), np.array([0.1]), best=1.0) > ei(np.array([1.5]), np.array([0.1]), best=1.0)
     assert ei(np.array([0.5]), np.array([1e-12]), best=1.0)[0] == pytest.approx(0.0, abs=1e-9)
 
 
@@ -269,9 +278,7 @@ def test_vdtuner_constraint_mode_respects_floor():
 def test_vdtuner_bootstrap_warm_start():
     space = _toy_space()
     first = VDTuner(space, _toy_objective, seed=2, rlim=0.8).run(15)
-    second = VDTuner(
-        space, _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history
-    )
+    second = VDTuner(space, _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history)
     second.run(10)
     fresh = [o for o in second.history if not o.bootstrap]
     assert len(fresh) == 10  # bootstrapped points are not re-evaluated

@@ -54,9 +54,17 @@ def test_collective_bytes_parsing():
 
 def test_roofline_terms_and_bottleneck():
     r = hlo_analysis.Roofline(
-        arch="a", shape="s", mesh="16x16", chips=256,
-        hlo_flops=1e18, hlo_bytes=1e12, coll_bytes=1e12,
-        coll_breakdown={}, coll_counts={}, model_flops=5e17, peak_mem_per_dev=1e9,
+        arch="a",
+        shape="s",
+        mesh="16x16",
+        chips=256,
+        hlo_flops=1e18,
+        hlo_bytes=1e12,
+        coll_bytes=1e12,
+        coll_breakdown={},
+        coll_counts={},
+        model_flops=5e17,
+        peak_mem_per_dev=1e9,
     )
     assert r.compute_s == pytest.approx(1e18 / (256 * hlo_analysis.PEAK_FLOPS))
     assert r.bottleneck == "compute"
@@ -102,8 +110,12 @@ def test_mini_dryrun_subprocess():
     env["PYTHONPATH"] = "src"
     env.pop("XLA_FLAGS", None)
     out = subprocess.run(
-        [sys.executable, "-c", MINI_DRYRUN], capture_output=True, text=True,
-        env=env, timeout=420, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        [sys.executable, "-c", MINI_DRYRUN],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=420,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     )
     assert out.returncode == 0, out.stderr[-2000:]
     result = json.loads(out.stdout.strip().splitlines()[-1])

@@ -45,11 +45,22 @@ def test_serving_space_is_nonfixed():
 
 def test_roofline_table_builds_from_artifacts(tmp_path):
     rec = {
-        "arch": "glm4-9b", "shape": "train_4k", "mesh": "16x16", "chips": 256,
-        "hlo_flops": 1e18, "hlo_bytes": 1e15, "coll_bytes": 1e13,
-        "coll_breakdown": {}, "coll_counts": {}, "model_flops": 5e17,
-        "peak_mem_per_dev": 2**30, "compute_s": 0.02, "memory_s": 0.005,
-        "collective_s": 0.001, "bottleneck": "compute", "useful_ratio": 0.5,
+        "arch": "glm4-9b",
+        "shape": "train_4k",
+        "mesh": "16x16",
+        "chips": 256,
+        "hlo_flops": 1e18,
+        "hlo_bytes": 1e15,
+        "coll_bytes": 1e13,
+        "coll_breakdown": {},
+        "coll_counts": {},
+        "model_flops": 5e17,
+        "peak_mem_per_dev": 2**30,
+        "compute_s": 0.02,
+        "memory_s": 0.005,
+        "collective_s": 0.001,
+        "bottleneck": "compute",
+        "useful_ratio": 0.5,
         "roofline_fraction": 0.5,
         "memory_analysis": {"temp_size_in_bytes": 2**30},
     }

@@ -70,12 +70,8 @@ def test_dense_decode_matches_full_forward():
     full_logits = cm.lm_logits(params, x, cfg)[:, -1]
     # prefill on the prefix + one decode step
     _, cache = tr.prefill(params, {"tokens": tokens[:, :-1]}, cfg, cache_len=12)
-    dec_logits, _ = tr.decode_step(
-        params, cache, tokens[:, -1], jnp.asarray(11, jnp.int32), cfg
-    )
-    np.testing.assert_allclose(
-        np.asarray(dec_logits), np.asarray(full_logits), atol=2e-3, rtol=2e-3
-    )
+    dec_logits, _ = tr.decode_step(params, cache, tokens[:, -1], jnp.asarray(11, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(full_logits), atol=2e-3, rtol=2e-3)
 
 
 def test_mamba2_decode_matches_full_forward():
@@ -87,12 +83,8 @@ def test_mamba2_decode_matches_full_forward():
     x = mb.forward(params, tokens, cfg)
     full_logits = cm.lm_logits(params, x, cfg)[:, -1]
     _, cache = mb.prefill(params, {"tokens": tokens[:, :-1]}, cfg)
-    dec_logits, _ = mb.decode_step(
-        params, cache, tokens[:, -1], jnp.asarray(11, jnp.int32), cfg
-    )
-    np.testing.assert_allclose(
-        np.asarray(dec_logits), np.asarray(full_logits), atol=5e-3, rtol=5e-3
-    )
+    dec_logits, _ = mb.decode_step(params, cache, tokens[:, -1], jnp.asarray(11, jnp.int32), cfg)
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(full_logits), atol=5e-3, rtol=5e-3)
 
 
 def test_moe_routing_conserves_mass():
@@ -110,8 +102,11 @@ def test_moe_routing_conserves_mass():
 
 def test_param_counts_match_published():
     expected = {
-        "deepseek-67b": 67e9, "qwen2.5-32b": 32.5e9, "glm4-9b": 9.4e9,
-        "mixtral-8x7b": 46.7e9, "mamba2-130m": 0.13e9,
+        "deepseek-67b": 67e9,
+        "qwen2.5-32b": 32.5e9,
+        "glm4-9b": 9.4e9,
+        "mixtral-8x7b": 46.7e9,
+        "mamba2-130m": 0.13e9,
     }
     for name, n in expected.items():
         got = get_arch(name).param_count()

@@ -230,13 +230,9 @@ def test_vdtuner_run_shim_matches_legacy_with_batch_backend():
 
 def test_vdtuner_run_shim_matches_legacy_with_bootstrap():
     first = VDTuner(_toy_space(), _toy_objective, seed=2, rlim=0.8, **_FAST).run(6)
-    ref = VDTuner(
-        _toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST
-    )
+    ref = VDTuner(_toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST)
     _legacy_vdtuner_run(ref, 5)
-    new = VDTuner(
-        _toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST
-    )
+    new = VDTuner(_toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST)
     new.run(5)
     _same_trajectory(new, ref)
     assert sum(1 for o in new.history if o.bootstrap) == len(first.history)
@@ -443,9 +439,7 @@ def test_as_eval_backend_adapter_captures_failures():
         return _toy_objective(cfg)
 
     backend = as_eval_backend(flaky)
-    out = backend.evaluate_batch(
-        [_toy_space().default_config("A"), _toy_space().default_config("B")]
-    )
+    out = backend.evaluate_batch([_toy_space().default_config("A"), _toy_space().default_config("B")])
     assert isinstance(out[0], TuningFailure)
     assert isinstance(out[1], dict)
     # objects already exposing evaluate_batch pass through unchanged
@@ -484,14 +478,10 @@ def test_state_dict_json_roundtrip_resumes_bit_identically():
 
 def test_restore_carries_bootstrap_observations():
     first = VDTuner(_toy_space(), _toy_objective, seed=2, rlim=0.8, **_FAST).run(6)
-    full = VDTuner(
-        _toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST
-    )
+    full = VDTuner(_toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST)
     TuningSession(full).run(7)
 
-    part = VDTuner(
-        _toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST
-    )
+    part = VDTuner(_toy_space(), _toy_objective, seed=3, rlim=0.9, bootstrap_history=first.history, **_FAST)
     session = TuningSession(part).run(3)
     state = json.loads(json.dumps(session.state_dict()))
     # restore() overwrites history wholesale — the §IV-F bootstrap

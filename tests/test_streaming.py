@@ -1,0 +1,293 @@
+"""Live VDMS lifecycle, the streaming tuning environment, and drift re-tuning."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DriftDetector,
+    TuningFailure,
+    TuningSession,
+    VDTuner,
+    streaming_sustained,
+)
+from repro.vdms import (
+    LiveVDMS,
+    VDMSInstance,
+    VDMSTuningEnv,
+    exact_topk_masked,
+    live_seg_size,
+    make_dataset,
+    make_space,
+    make_trace,
+)
+
+LIVE_CFG = dict(
+    index_type="IVF_FLAT",
+    nlist=16,
+    nprobe=16,
+    segment_max_size=256,
+    seal_proportion=0.5,
+    graceful_time=0.0,
+    search_batch_size=8,
+    topk_merge_width=64,
+    kmeans_iters=4,
+    storage_bf16=False,
+)
+
+
+def _vectors(n, dim=16, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, dim)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# lifecycle
+# ---------------------------------------------------------------------------
+def test_seal_fires_exactly_at_threshold():
+    s = live_seg_size(256, 0.5)
+    assert s == 128
+    live = LiveVDMS(LIVE_CFG, dim=16, capacity=1024)
+    live.insert(_vectors(s - 1))
+    assert live.n_sealed == 0 and len(live.tail) == s - 1
+    live.insert(_vectors(1, seed=1))
+    assert live.n_sealed == 1 and len(live.tail) == 0
+    assert live.seal_history == [1]
+
+
+def test_bulk_insert_seals_multiple_segments():
+    live = LiveVDMS(LIVE_CFG, dim=16, capacity=1024)
+    live.bootstrap(_vectors(300))
+    assert live.n_sealed == 2 and len(live.tail) == 300 - 2 * 128
+    assert live.seal_build_s == 0.0  # bootstrap seals are initial build time
+    assert live.build_time > 0.0
+
+
+def test_capacity_guard():
+    live = LiveVDMS(LIVE_CFG, dim=16, capacity=100)
+    with pytest.raises(ValueError):
+        live.insert(_vectors(101))
+
+
+def test_tombstoned_ids_never_returned():
+    live = LiveVDMS(LIVE_CFG, dim=16, capacity=1024)
+    data = _vectors(200)
+    live.insert(data)  # 128 sealed + 72 growing
+    victims = [3, 150]  # one sealed, one in the tail
+    for v in victims:
+        assert live.delete(v)
+        assert not live.delete(v)  # second delete is a no-op
+    ids, _ = live.search(data[victims], topk=10)
+    assert not set(np.asarray(victims).tolist()) & set(ids.ravel().tolist())
+
+
+def test_compaction_triggers_and_preserves_visible_set():
+    live = LiveVDMS(LIVE_CFG, dim=16, capacity=1024, compact_threshold=0.2)
+    live.insert(_vectors(128))  # exactly one sealed segment
+    for gid in range(40):  # > 20% of the segment
+        live.delete(gid)
+    assert live.n_compactions >= 1
+    assert set(live.visible_ids().tolist()) == set(range(40, 128))
+    # compacted segment still searchable and never returns dead ids
+    ids, _ = live.search(_vectors(8, seed=2), topk=10)
+    returned = set(ids.ravel().tolist()) - {-1}
+    assert returned <= set(range(40, 128))
+
+
+def test_live_search_exact_with_flat_and_zero_graceful():
+    cfg = dict(LIVE_CFG, index_type="FLAT")
+    live = LiveVDMS(cfg, dim=16, capacity=1024)
+    data = _vectors(300)
+    live.insert(data)
+    for gid in (5, 17, 200):
+        live.delete(gid)
+    queries = _vectors(20, seed=9)
+    ids, _ = live.search(queries, topk=5)
+    dead = np.ones(300, bool)
+    dead[live.visible_ids()] = False
+    want = exact_topk_masked(data, queries, dead, 5)
+    for got_row, want_row in zip(ids, want):
+        assert set(got_row.tolist()) == set(want_row.tolist())
+
+
+def test_incremental_builds_freeze_shared_calibration():
+    cfg = dict(LIVE_CFG, index_type="IVF_SQ8")
+    live = LiveVDMS(cfg, dim=16, capacity=1024)
+    live.insert(_vectors(128))
+    scale_first = np.asarray(live.bundle.arrays["scale"]).copy()
+    live.insert(_vectors(128, seed=5) * 0.5)  # different dynamic range
+    assert live.n_sealed == 2
+    np.testing.assert_array_equal(np.asarray(live.bundle.arrays["scale"]), scale_first)
+
+
+# ---------------------------------------------------------------------------
+# streaming environment
+# ---------------------------------------------------------------------------
+def _streaming_env(n_phases=2, **kw):
+    trace = make_trace("glove_like", n_base=500, n_ops=150, seed=1, mix=(0.3, 0.6, 0.1), **kw)
+    return VDMSTuningEnv(trace=trace, workload="streaming", mode="analytic", seed=0, n_phases=n_phases)
+
+
+def test_env_constructor_validation():
+    with pytest.raises(ValueError):
+        VDMSTuningEnv(workload="static")  # needs a dataset
+    with pytest.raises(ValueError):
+        VDMSTuningEnv(workload="streaming")  # needs a trace
+    with pytest.raises(ValueError):
+        VDMSTuningEnv(make_dataset("glove_like", n=256, n_queries=8), workload="bogus")
+
+
+def test_env_phase_keyed_cache():
+    env = _streaming_env(n_phases=2)
+    cfg = make_space().default_config("IVF_FLAT")
+    r0 = env(cfg)
+    assert env.n_evals == 1
+    env(cfg)
+    assert env.n_evals == 1  # cached within the phase
+    env.set_phase(1)
+    r1 = env(cfg)
+    assert env.n_evals == 2  # the workload moved: genuine re-evaluation
+    assert r0 != r1
+    with pytest.raises(ValueError):
+        env.set_phase(2)
+
+
+def test_env_streaming_evaluate_batch_dedupes():
+    env = _streaming_env(n_phases=1)
+    space = make_space()
+    a = space.default_config("FLAT")
+    b = space.default_config("IVF_FLAT")
+    out = env.evaluate_batch([a, b, dict(a)])
+    assert env.n_evals == 2
+    assert out[0] == out[2]
+    assert {"speed", "recall", "mem_gib", "seal_build_s"} <= set(out[1])
+
+
+def test_static_mode_results_and_cache_keys_unchanged(small_dataset):
+    env = VDMSTuningEnv(small_dataset, mode="analytic", seed=0)
+    cfg = make_space().default_config("IVF_FLAT")
+    got = env(cfg)
+    inst = VDMSInstance(small_dataset, cfg, seed=0)
+    want = inst.measure(repeats=env.repeats, mode="analytic")
+    for key in ("speed", "recall", "mem_gib"):
+        assert got[key] == want[key], key  # bit-identical static path
+    # static cache keys carry no phase prefix (pre-streaming format)
+    (key,) = env.cache
+    assert all(isinstance(k, str) and k != "__phase__" for k, _ in key)
+
+
+# ---------------------------------------------------------------------------
+# drift detection + re-tuning
+# ---------------------------------------------------------------------------
+def test_drift_detector_fires_on_relative_change():
+    det = DriftDetector(metrics=("speed", "recall"), rel_threshold=0.2, warmup=2)
+    assert not det.observe({"speed": 100.0, "recall": 0.9})
+    assert not det.observe({"speed": 110.0, "recall": 0.9})  # still warming up
+    assert det.reference == {"speed": 105.0, "recall": 0.9}
+    assert not det.observe({"speed": 120.0, "recall": 0.9})  # +14% < 20%
+    assert det.observe({"speed": 60.0, "recall": 0.9})  # -43% fires
+    assert det.n_fired == 1
+    det.reset()
+    assert det.reference is None
+    assert not det.observe({"speed": 60.0, "recall": 0.9})  # new reference
+
+
+def test_drift_detector_state_roundtrip():
+    det = DriftDetector(rel_threshold=0.1)
+    det.observe({"speed": 10.0, "recall": 0.5})
+    det.observe({"speed": 20.0, "recall": 0.5})
+    state = json.loads(json.dumps(det.state_dict()))
+    det2 = DriftDetector().load_state_dict(state)
+    assert det2.reference == det.reference
+    assert det2.n_fired == det.n_fired == 1
+    assert det2.log == det.log
+
+
+class _FakeBackend:
+    """Deterministic cheap objective so session tests avoid real replays."""
+
+    def __init__(self):
+        self.n_evals = 0
+
+    def __call__(self, cfg):
+        self.n_evals += 1
+        rng = np.random.default_rng(abs(hash(cfg["index_type"])) % 2**32)
+        return {"speed": 100.0 + 50.0 * rng.random(), "recall": 0.5 + 0.4 * rng.random()}
+
+
+def _tuned_session(n=9, **kw):
+    space = make_space()
+    backend = _FakeBackend()
+    tuner = VDTuner(space, backend, seed=0, warm_start=True, **kw)
+    session = TuningSession(tuner)
+    session.run(n)
+    return session, tuner, backend
+
+
+def test_retune_drops_stale_and_keeps_warm_gp():
+    session, tuner, _ = _tuned_session(9)
+    assert tuner._gp_warm is not None  # warm GP state exists pre-drift
+    stale = session.retune()
+    assert stale == 9
+    assert tuner.history == [] and session.n_observations == 0
+    assert tuner._gp_warm is not None  # hyperparameters survive the reset
+    assert tuner.abandon.remaining == list(tuner.space.type_names)
+
+
+def test_retune_keep_stale_demotes_to_bootstrap():
+    session, tuner, _ = _tuned_session(9)
+    stale = session.retune(keep_stale=True)
+    assert stale == 9
+    assert len(tuner.history) == 9
+    assert all(o.bootstrap for o in tuner.history)
+    assert session.n_observations == 0
+
+
+def test_retune_reanchors_and_tops_up_budget():
+    session, tuner, backend = _tuned_session(9)
+    anchors = tuner.pareto_configs(max_n=2)
+    n_before = backend.n_evals
+    session.retune(5, reanchor=anchors)
+    assert session.n_observations >= 5
+    assert backend.n_evals > n_before
+    # the anchors landed first, as fresh observations
+    for obs, cfg in zip(tuner.history, anchors):
+        assert obs.config == cfg and not obs.bootstrap
+
+
+def test_probe_drift_counts_backend_failure_as_drift():
+    session, tuner, _ = _tuned_session(9)
+
+    class Failing:
+        def __call__(self, cfg):
+            raise TuningFailure("gone")
+
+    session.backend = Failing()
+    det = DriftDetector()
+    assert session.probe_drift(det, tuner.best_config())
+    assert det.n_fired == 1
+
+
+def test_best_config_and_pareto_configs():
+    session, tuner, _ = _tuned_session(9)
+    best = tuner.best_config()
+    assert best["index_type"] in tuner.space.type_names
+    floor = float(np.median(tuner.Y[:, 1]))
+    feas_best = tuner.best_config(rlim=floor)
+    got = [o for o in tuner.history if o.config == feas_best]
+    assert got and got[0].y[1] >= floor
+    front = tuner.pareto_configs(max_n=3)
+    assert 1 <= len(front) <= 3
+
+
+def test_streaming_objective_charges_ingest_overhead():
+    spec = streaming_sustained(alpha=1.0)
+    raw = {"speed": 1000.0, "recall": 0.9, "n_searches": 100.0, "search_s": 0.1, "seal_build_s": 0.1}
+    qps, recall = spec(raw)
+    assert qps == pytest.approx(500.0)  # half the search-only throughput
+    assert recall == 0.9
+    qps0, _ = streaming_sustained(alpha=0.0)(raw)
+    assert qps0 == pytest.approx(1000.0)
+    static_raw = {"speed": 1234.0, "recall": 0.8}
+    assert streaming_sustained()(static_raw) == (1234.0, 0.8)

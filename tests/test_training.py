@@ -153,15 +153,29 @@ def test_train_loss_decreases_and_resumes(tmp_path):
     from repro.launch.train import TrainConfig, run
 
     tcfg = TrainConfig(
-        arch="mamba2-130m", smoke=True, steps=25, seq_len=64, global_batch=4,
-        ckpt_dir=str(tmp_path), ckpt_every=10, async_ckpt=False, log_every=100,
+        arch="mamba2-130m",
+        smoke=True,
+        steps=25,
+        seq_len=64,
+        global_batch=4,
+        ckpt_dir=str(tmp_path),
+        ckpt_every=10,
+        async_ckpt=False,
+        log_every=100,
     )
     out = run(tcfg)
     assert out["final_loss"] < out["losses"][0] - 0.05
     # resume continues from the saved step
     tcfg2 = TrainConfig(
-        arch="mamba2-130m", smoke=True, steps=30, seq_len=64, global_batch=4,
-        ckpt_dir=str(tmp_path), ckpt_every=10, async_ckpt=False, log_every=100,
+        arch="mamba2-130m",
+        smoke=True,
+        steps=30,
+        seq_len=64,
+        global_batch=4,
+        ckpt_dir=str(tmp_path),
+        ckpt_every=10,
+        async_ckpt=False,
+        log_every=100,
     )
     out2 = run(tcfg2)
     assert len(out2["losses"]) == 5  # only the remaining 5 steps ran
@@ -176,14 +190,11 @@ def test_microbatched_grads_match_full_batch():
     cfg = reduce(get_arch("glm4-9b"))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    batch = {"tokens": jnp.asarray(
-        np.random.default_rng(0).integers(0, cfg.vocab, (4, 33)), jnp.int32)}
+    batch = {"tokens": jnp.asarray(np.random.default_rng(0).integers(0, cfg.vocab, (4, 33)), jnp.int32)}
     opt_cfg = adamw.AdamWConfig()
     comp = CompressionConfig("none")
     full = make_train_step(model, TrainConfig(arch="x", global_batch=4, steps=1), opt_cfg, comp)
-    micro = make_train_step(
-        model, TrainConfig(arch="x", global_batch=4, microbatch=2, steps=1), opt_cfg, comp
-    )
+    micro = make_train_step(model, TrainConfig(arch="x", global_batch=4, microbatch=2, steps=1), opt_cfg, comp)
     st_ = adamw.init_state(params)
     l1, p1, _, _ = full(params, st_, batch, None)
     l2, p2, _, _ = micro(params, st_, batch, None)

@@ -7,13 +7,23 @@ pytest.importorskip("hypothesis", reason="optional test dep; pip install -e .[te
 from hypothesis import given, settings, strategies as st
 
 from repro.vdms import (
-    VDMSInstance, VDMSTuningEnv, make_dataset, make_space, plan_segments,
-    recall_at_k, stack_sealed,
+    VDMSInstance,
+    VDMSTuningEnv,
+    make_dataset,
+    make_space,
+    plan_segments,
+    recall_at_k,
+    stack_sealed,
 )
 
 BASE_SYS = dict(
-    segment_max_size=1024, seal_proportion=0.75, graceful_time=0.2,
-    search_batch_size=16, topk_merge_width=32, kmeans_iters=8, storage_bf16=False,
+    segment_max_size=1024,
+    seal_proportion=0.75,
+    graceful_time=0.2,
+    search_batch_size=16,
+    topk_merge_width=32,
+    kmeans_iters=8,
+    storage_bf16=False,
 )
 
 
@@ -22,8 +32,10 @@ BASE_SYS = dict(
 # ---------------------------------------------------------------------------
 @settings(max_examples=60, deadline=None)
 @given(
-    st.integers(256, 20000), st.integers(64, 8192),
-    st.floats(0.1, 1.0), st.floats(0.0, 0.9),
+    st.integers(256, 20000),
+    st.integers(64, 8192),
+    st.floats(0.1, 1.0),
+    st.floats(0.0, 0.9),
 )
 def test_segment_plan_partitions_data(n, smax, seal, graceful):
     plan = plan_segments(n, smax, seal, graceful)
@@ -69,8 +81,7 @@ def test_index_search_and_measure(small_dataset, icfg):
 
 
 def test_flat_exact_when_everything_searched(small_dataset):
-    cfg = {**BASE_SYS, "index_type": "FLAT", "graceful_time": 0.0,
-           "topk_merge_width": 128}
+    cfg = {**BASE_SYS, "index_type": "FLAT", "graceful_time": 0.0, "topk_merge_width": 128}
     inst = VDMSInstance(small_dataset, cfg, seed=0)
     r = inst.measure(repeats=1, mode="analytic")
     assert r["recall"] == pytest.approx(1.0)
@@ -93,8 +104,7 @@ def test_graceful_time_trades_recall_for_speed():
     # growing tail = everything beyond one sealed segment
     out = {}
     for g in (0.0, 0.9):
-        cfg = {**BASE_SYS, "segment_max_size": 1024, "seal_proportion": 1.0,
-               "graceful_time": g, "index_type": "FLAT"}
+        cfg = {**BASE_SYS, "segment_max_size": 1024, "seal_proportion": 1.0, "graceful_time": g, "index_type": "FLAT"}
         r = VDMSInstance(ds, cfg, seed=0).measure(repeats=1, mode="analytic")
         out[g] = r
     assert out[0.0]["recall"] >= out[0.9]["recall"]
@@ -102,11 +112,8 @@ def test_graceful_time_trades_recall_for_speed():
 
 
 def test_storage_bf16_cuts_memory(small_dataset):
-    cfgs = [
-        {**BASE_SYS, "index_type": "FLAT", "storage_bf16": b} for b in (False, True)
-    ]
-    mems = [VDMSInstance(small_dataset, c, seed=0).measure(repeats=1, mode="analytic")["mem_gib"]
-            for c in cfgs]
+    cfgs = [{**BASE_SYS, "index_type": "FLAT", "storage_bf16": b} for b in (False, True)]
+    mems = [VDMSInstance(small_dataset, c, seed=0).measure(repeats=1, mode="analytic")["mem_gib"] for c in cfgs]
     assert mems[1] < mems[0]
 
 

@@ -1,0 +1,187 @@
+"""Streaming workload traces: generation, time-aware ground truth, windows."""
+import numpy as np
+import pytest
+
+from repro.vdms import (
+    make_trace,
+    recall_at_k_masked,
+    replay_trace,
+    time_aware_ground_truth,
+)
+from repro.vdms.workload import DRIFT_SCHEDULES, OP_DELETE, OP_INSERT, OP_SEARCH
+
+FLAT_CFG = dict(
+    index_type="FLAT",
+    segment_max_size=256,
+    seal_proportion=0.5,
+    graceful_time=0.0,
+    search_batch_size=8,
+    topk_merge_width=64,
+    kmeans_iters=4,
+    storage_bf16=False,
+)
+
+
+def small_trace(**kw):
+    kw.setdefault("n_base", 400)
+    kw.setdefault("n_ops", 160)
+    kw.setdefault("seed", 3)
+    kw.setdefault("mix", (0.3, 0.55, 0.15))
+    return make_trace("glove_like", **kw)
+
+
+def test_trace_shapes_and_payload_validity():
+    t = small_trace()
+    assert t.kinds.shape == t.payload.shape == t.times.shape == (t.n_ops,)
+    assert t.inserts.shape == (int((t.kinds == OP_INSERT).sum()), t.dim)
+    assert t.queries.shape == (int((t.kinds == OP_SEARCH).sum()), t.dim)
+    assert (np.diff(t.times) >= 0).all() and t.times[0] >= 0 and t.times[-1] <= 1
+    # insert/search payloads are sequential rows into their arrays
+    assert (t.payload[t.kinds == OP_INSERT] == np.arange(t.n_inserts)).all()
+    assert (t.payload[t.kinds == OP_SEARCH] == np.arange(t.n_searches)).all()
+    # delete victims: unique, in range, and inserted before being deleted
+    n_inserted = 0
+    seen = set()
+    for i in range(t.n_ops):
+        if t.kinds[i] == OP_INSERT:
+            n_inserted += 1
+        elif t.kinds[i] == OP_DELETE:
+            victim = int(t.payload[i])
+            assert 0 <= victim < t.n_base + n_inserted
+            assert victim not in seen  # never double-deleted
+            seen.add(victim)
+
+
+def test_drift_schedules_bounded():
+    tau = np.linspace(0.0, 1.0, 101)
+    for name, fn in DRIFT_SCHEDULES.items():
+        w = fn(tau)
+        assert ((w >= -1e-12) & (w <= 1 + 1e-12)).all(), name
+    assert (DRIFT_SCHEDULES["none"](tau) == 0).all()
+
+
+def test_mix_drift_shifts_arrival_mix():
+    t = make_trace(
+        "glove_like",
+        n_base=64,
+        n_ops=3000,
+        seed=0,
+        drift="ramp",
+        mix=(0.05, 0.90, 0.05),
+        mix_to=(0.70, 0.20, 0.10),
+    )
+    third = t.n_ops // 3
+    early = (t.kinds[:third] == OP_INSERT).mean()
+    late = (t.kinds[-third:] == OP_INSERT).mean()
+    assert late > early + 0.3
+
+
+def _slow_oracle_gt(trace, k):
+    """Independent per-query python sweep (no batching, no masks)."""
+    all_vec = trace.all_vectors()
+    visible = set(range(trace.n_base))
+    out = -np.ones((trace.n_searches, k), np.int32)
+    n_ins = 0
+    for i in range(trace.n_ops):
+        kind = int(trace.kinds[i])
+        if kind == OP_INSERT:
+            visible.add(trace.n_base + n_ins)
+            n_ins += 1
+        elif kind == OP_DELETE:
+            visible.discard(int(trace.payload[i]))
+        else:
+            ids = np.fromiter(sorted(visible), np.int64)
+            sims = all_vec[ids] @ trace.queries[int(trace.payload[i])]
+            order = np.argsort(-sims, kind="stable")[: min(k, ids.size)]
+            out[int(trace.payload[i]), : order.size] = ids[order].astype(np.int32)
+    return out
+
+
+def test_time_aware_gt_matches_slow_oracle():
+    t = small_trace(n_base=150, n_ops=120)
+    fast = time_aware_ground_truth(t)
+    slow = _slow_oracle_gt(t, t.k)
+    for row, (a, b) in enumerate(zip(fast, slow)):
+        assert set(a.tolist()) == set(b.tolist()), row
+
+
+def test_gt_respects_insert_visibility():
+    t = small_trace(n_base=100, n_ops=100, seed=7)
+    gt = time_aware_ground_truth(t)
+    n_inserted = 0
+    for i in range(t.n_ops):
+        if t.kinds[i] == OP_INSERT:
+            n_inserted += 1
+        elif t.kinds[i] == OP_SEARCH:
+            row = gt[int(t.payload[i])]
+            assert (row < t.n_base + n_inserted).all()
+
+
+def test_window_folds_prefix_into_base():
+    t = small_trace(n_base=200, n_ops=150)
+    lo = t.n_ops // 2
+    w = t.window(lo, t.n_ops)
+    # the window's base is exactly the visible set at op lo
+    dead = np.zeros(t.capacity, bool)
+    n_vis = t.n_base
+    for i in range(lo):
+        if t.kinds[i] == OP_INSERT:
+            n_vis += 1
+        elif t.kinds[i] == OP_DELETE:
+            dead[t.payload[i]] = True
+    vis_ids = np.flatnonzero(~dead[:n_vis])
+    np.testing.assert_array_equal(w.base, t.all_vectors()[vis_ids])
+    # window ground truth equals the full-trace ground truth on shared
+    # searches, modulo the dense re-assignment of global ids
+    old_of_new = np.concatenate([vis_ids, t.n_base + t.payload[np.flatnonzero(t.kinds[lo:] == OP_INSERT) + lo]])
+    gt_full = time_aware_ground_truth(t)
+    gt_win = time_aware_ground_truth(w)
+    win_q_rows = t.payload[np.flatnonzero(t.kinds[lo:] == OP_SEARCH) + lo]
+    for new_row, old_row in enumerate(win_q_rows):
+        got = {int(old_of_new[g]) for g in gt_win[new_row] if g >= 0}
+        want = {int(g) for g in gt_full[int(old_row)] if g >= 0}
+        assert got == want
+
+
+def test_split_covers_all_ops():
+    t = small_trace()
+    phases = t.split(4)
+    assert sum(p.n_ops for p in phases) <= t.n_ops  # pre-window deletes may fold
+    assert sum(p.n_searches for p in phases) == t.n_searches
+    assert sum(p.n_inserts for p in phases) == t.n_inserts
+
+
+def test_replay_flat_graceful0_is_exact():
+    t = small_trace(n_base=300, n_ops=120)
+    r = replay_trace(t, FLAT_CFG, mode="analytic")
+    assert r["recall"] == pytest.approx(1.0)
+    assert r["speed"] > 0 and r["mem_gib"] > 0
+
+
+def test_recall_at_k_masked_padding():
+    gt = np.array([[0, 1, -1], [-1, -1, -1]], np.int32)
+    pred = np.array([[0, 1, 2], [5, 6, 7]], np.int32)
+    assert recall_at_k_masked(pred, gt) == 1.0  # all-pad row drops out
+    pred2 = np.array([[0, 9, 9], [5, 6, 7]], np.int32)
+    assert recall_at_k_masked(pred2, gt) == 0.5
+
+
+def test_delete_heavy_mix_survives_victim_exhaustion():
+    # deletes outpace inserts until the victim pool empties: exhausted delete
+    # ops are dropped instead of crashing, and every kept victim is valid
+    t = make_trace("glove_like", n_base=4, n_ops=200, mix=(0.0, 0.4, 0.6), dim=16, seed=0)
+    n_deletes = int((t.kinds == OP_DELETE).sum())
+    assert n_deletes <= t.n_base + t.n_inserts
+    victims = t.payload[t.kinds == OP_DELETE]
+    assert len(set(victims.tolist())) == n_deletes
+    assert ((victims >= 0) & (victims < t.capacity)).all()
+    time_aware_ground_truth(t)  # replayable end-to-end
+
+
+def test_make_trace_validates_inputs():
+    with pytest.raises(ValueError):
+        make_trace("glove_like", n_base=10, n_ops=10, drift="warp")
+    with pytest.raises(ValueError):
+        make_trace("glove_like", n_base=10, n_ops=10, mix=(1.0, -0.5, 0.5))
+    with pytest.raises(ValueError):
+        small_trace().window(5, 3)
