@@ -1,10 +1,16 @@
 """Paper Table IV + Table V: improvement of VDTuner over the Default setting,
-and the chosen index/parameters per dataset."""
+and the chosen index/parameters per dataset.
+
+The search space is registry-derived and includes the public-hook
+``IVF_PQR`` family; each row records whether it reached the Pareto front.
+``index_types=`` (or ``--index-types`` on ``benchmarks.run``) restricts the
+run to a comma-listed subset of registered families.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.vdms import make_space
+from repro.vdms import ivf_pqr, make_space, registered_names, unregister_family
 
 from .common import DATASETS, N_ITERS, emit, make_env, run_method
 
@@ -20,12 +26,25 @@ def best_without_sacrifice(tuner, default_y):
     return spd_imp, rec_imp
 
 
-def run(seed: int = 0):
-    space = make_space()
+def run(seed: int = 0, index_types=None):
+    # IVF_PQR joins this suite's space only: scope the registration so later
+    # suites in the same process (benchmarks.run) keep the default registry
+    added_pqr = ivf_pqr.FAMILY.name not in registered_names()
+    if added_pqr:
+        ivf_pqr.register()
+    try:
+        return _run(seed=seed, index_types=index_types)
+    finally:
+        if added_pqr:
+            unregister_family(ivf_pqr.FAMILY.name)
+
+
+def _run(seed: int = 0, index_types=None):
+    space = make_space(include=index_types)
     rows = {}
     for ds in DATASETS:
         env = make_env(ds, seed=seed)
-        default = env(space.default_config("AUTOINDEX"))
+        default = env(make_space().default_config("AUTOINDEX"))
         default_y = np.array([default["speed"], default["recall"]])
         tuner, wall, _session = run_method("vdtuner", env, space, N_ITERS, seed=seed)
         spd_imp, rec_imp = best_without_sacrifice(tuner, default_y)
@@ -33,17 +52,22 @@ def run(seed: int = 0):
             (o for o in tuner.history if not o.failed),
             key=lambda o: o.y[0] * (o.y[1] >= default_y[1]),
         )
+        front_types = sorted({c["index_type"] for c in tuner.pareto_configs()})
+        pqr_on_front = "IVF_PQR" in front_types
         rows[ds] = dict(
             speed_improvement_pct=spd_imp, recall_improvement_pct=rec_imp,
             best_index=best.index_type,
             best_config={k: v for k, v in best.config.items()
                          if k in ("nlist", "nprobe", "m", "nbits", "M",
                                   "efConstruction", "ef", "reorder_k")},
+            pareto_index_types=front_types,
+            ivf_pqr_on_front=pqr_on_front,
             wall_s=wall,
         )
         emit(
             f"autoconfig/{ds}", wall * 1e6 / N_ITERS,
-            f"speed_imp={spd_imp:.1f}%;recall_imp={rec_imp:.1f}%;best={best.index_type}",
+            f"speed_imp={spd_imp:.1f}%;recall_imp={rec_imp:.1f}%;"
+            f"best={best.index_type};pqr_on_front={int(pqr_on_front)}",
         )
     return rows
 

@@ -84,10 +84,11 @@ def run_schedule(
     quick: bool = True,
     mode: str = "analytic",
     rel_threshold: float = 0.12,
+    index_types=None,
 ):
     sz = _sizes(quick)
     spec = streaming_sustained()
-    space = make_space()
+    space = make_space(include=index_types)
     trace = make_trace(
         "glove_like",
         n_base=sz["n_base"],
@@ -271,8 +272,27 @@ def check_invariants(seed: int = 0, mode: str = "analytic") -> list:
     return failures
 
 
-def run(seed: int = 0, quick: bool = True, schedules=SCHEDULES, mode: str = "analytic"):
-    return {s: run_schedule(s, seed=seed, quick=quick, mode=mode) for s in schedules}
+def run(seed: int = 0, quick: bool = True, schedules=SCHEDULES, mode: str = "analytic", index_types=None):
+    index_types = parse_index_types(index_types)
+    return {s: run_schedule(s, seed=seed, quick=quick, mode=mode, index_types=index_types) for s in schedules}
+
+
+def parse_index_types(value):
+    """Normalize an ``--index-types`` value (comma list or sequence) and
+    validate it against the registry, raising ``ValueError`` with the sorted
+    registered families on unknown names. ``IVF_PQR`` is registered via its
+    public hook if (and only if) the filter asks for it."""
+    if value is None:
+        return None
+    from repro.vdms import ivf_pqr, registered_names
+
+    names = tuple(s.strip() for s in value.split(",")) if isinstance(value, str) else tuple(value)
+    if ivf_pqr.FAMILY.name in names:
+        ivf_pqr.register()
+    unknown = sorted(set(names) - set(registered_names()))
+    if unknown:
+        raise ValueError(f"unknown index types {unknown}; registered families: {sorted(registered_names())}")
+    return names
 
 
 def main(argv=None) -> int:
@@ -281,21 +301,37 @@ def main(argv=None) -> int:
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--mode", default="analytic", choices=("analytic", "wall"))
     p.add_argument("--schedules", nargs="+", default=list(SCHEDULES), choices=("none", "ramp", "step", "sine"))
+    p.add_argument(
+        "--index-types",
+        default=None,
+        metavar="A,B,...",
+        help="restrict tuning to these registered index families (comma list; IVF_PQR included)",
+    )
     p.add_argument("--json", default=None, metavar="PATH", help="write results as JSON (CI artifact)")
     p.add_argument("--check-invariants", action="store_true", help="exit 1 unless the streaming-engine invariants hold")
     p.add_argument("--check-improvement", action="store_true",
                    help="exit 1 unless re-tuning beats frozen mean HV for "
                         ">= 1 schedule")
     args = p.parse_args(argv)
+    try:
+        index_types = parse_index_types(args.index_types)
+    except ValueError as e:
+        p.error(str(e))
 
     out = {"quick": bool(args.quick), "seed": args.seed, "mode": args.mode,
-           "sizes": _sizes(args.quick), "schedules": {}}
+           "sizes": _sizes(args.quick), "index_types": args.index_types, "schedules": {}}
     if args.check_invariants:
         failures = check_invariants(seed=args.seed, mode=args.mode)
         out["invariants"] = {"ok": not failures, "failures": failures}
         for f in failures:
             print(f"INVARIANT FAILED: {f}", file=sys.stderr)
-    out["schedules"] = run(seed=args.seed, quick=args.quick, schedules=args.schedules, mode=args.mode)
+    out["schedules"] = run(
+        seed=args.seed,
+        quick=args.quick,
+        schedules=args.schedules,
+        mode=args.mode,
+        index_types=index_types,
+    )
     if args.json:
         with open(args.json, "w") as f:
             json.dump(out, f, indent=2)

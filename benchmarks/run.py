@@ -10,29 +10,45 @@
 # QPS at 32k vectors); the default is a fast deterministic configuration.
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from . import (
         bench_ablation, bench_autoconfig, bench_costaware, bench_efficiency,
         bench_kernels, bench_overhead, bench_preference, bench_streaming,
     )
 
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument(
+        "--index-types",
+        default=None,
+        metavar="A,B,...",
+        help="restrict registry-aware suites (autoconfig, streaming) to these "
+        "index families (comma list validated against the registry; the "
+        "public-hook IVF_PQR counts)",
+    )
+    args = p.parse_args(argv)
+    try:
+        index_types = bench_streaming.parse_index_types(args.index_types)
+    except ValueError as e:
+        p.error(str(e))
+
     full = bool(int(os.environ.get("REPRO_BENCH_FULL", "0")))
     print("name,us_per_call,derived")
     suites = [
         ("kernels", bench_kernels.run, {}),
-        ("autoconfig(TabIV/V)", bench_autoconfig.run, {}),
+        ("autoconfig(TabIV/V)", bench_autoconfig.run, {"index_types": index_types}),
         ("efficiency(Fig6/7)", bench_efficiency.run, {"datasets": ("glove_like",)}),
         ("ablation(Fig8-10)", bench_ablation.run, {}),
         ("preference(Fig12)", bench_preference.run, {}),
         ("costaware(Fig13)", bench_costaware.run, {}),
         ("overhead(TabVI)", bench_overhead.run, {}),
-        ("streaming(drift)", bench_streaming.run, {"quick": not full}),
+        ("streaming(drift)", bench_streaming.run, {"quick": not full, "index_types": index_types}),
     ]
     failures = 0
     for name, fn, kw in suites:

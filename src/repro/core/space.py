@@ -104,9 +104,29 @@ class SearchSpace:
         self.n_types = len(self.type_names)
         self.dims = self.n_types + len(self._cols)
 
+    @classmethod
+    def from_families(
+        cls, families: Sequence[Any], system_params: Sequence[Param]
+    ) -> "SearchSpace":
+        """Registry-driven construction: each family object contributes its
+        ``name`` and declared ``params`` (duck-typed, so any index-family
+        registry can drive the space without this module knowing about it)."""
+        return cls(
+            index_types={f.name: tuple(f.params) for f in families},
+            system_params=system_params,
+        )
+
+    def _require_type(self, index_type: str) -> str:
+        if index_type not in self.index_types:
+            raise ValueError(
+                f"unknown index type {index_type!r}; registered families: "
+                f"{sorted(self.index_types)}"
+            )
+        return index_type
+
     # ------------------------------------------------------------------
     def params_of(self, index_type: str) -> Tuple[Param, ...]:
-        return self.index_types[index_type] + self.system_params
+        return self.index_types[self._require_type(index_type)] + self.system_params
 
     def default_config(self, index_type: str) -> Config:
         cfg: Config = {"index_type": index_type}
@@ -117,7 +137,7 @@ class SearchSpace:
     # --- encode / decode ---------------------------------------------------
     def encode(self, cfg: Config) -> np.ndarray:
         x = np.zeros(self.dims, dtype=np.float64)
-        t = cfg["index_type"]
+        t = self._require_type(cfg["index_type"])
         x[self.type_names.index(t)] = 1.0
         for j, (col, owner, p) in enumerate(self._cols):
             if owner is None or owner == t:
@@ -131,6 +151,8 @@ class SearchSpace:
         x = np.asarray(x, dtype=np.float64)
         if index_type is None:
             index_type = self.type_names[int(np.argmax(x[: self.n_types]))]
+        else:
+            self._require_type(index_type)
         cfg: Config = {"index_type": index_type}
         for j, (col, owner, p) in enumerate(self._cols):
             if owner is None or owner == index_type:
@@ -141,6 +163,7 @@ class SearchSpace:
         """Boolean mask over dims that the acquisition may vary when polling
         `index_type` (its own index params + system params). The one-hot block
         and foreign index params stay fixed (paper §IV-C)."""
+        self._require_type(index_type)
         m = np.zeros(self.dims, dtype=bool)
         for j, (col, owner, p) in enumerate(self._cols):
             if owner is None or owner == index_type:
@@ -151,6 +174,7 @@ class SearchSpace:
     def owned_cols(self, index_type: str) -> List[int]:
         """Indices into ``self._cols`` of the parameters ``index_type`` owns
         (its index params, then the system params) — ``params_of()`` order."""
+        self._require_type(index_type)
         own = [j for j, (col, owner, p) in enumerate(self._cols) if owner == index_type]
         sys = [j for j, (col, owner, p) in enumerate(self._cols) if owner is None]
         return own + sys
@@ -159,7 +183,7 @@ class SearchSpace:
         """Encoded row with the type one-hot set and every parameter at its
         encoded default — the fixed part of any candidate of this type."""
         x = np.zeros(self.dims, dtype=np.float64)
-        x[self.type_names.index(index_type)] = 1.0
+        x[self.type_names.index(self._require_type(index_type))] = 1.0
         for j, (col, owner, p) in enumerate(self._cols):
             x[self.n_types + j] = p.encode(p.default)
         return x
@@ -208,6 +232,8 @@ class SearchSpace:
     def sample(
         self, rng: np.random.Generator, n: int, index_type: Optional[str] = None
     ) -> List[Config]:
+        if index_type is not None:
+            self._require_type(index_type)
         out = []
         for i in range(n):
             t = index_type or self.type_names[int(rng.integers(self.n_types))]

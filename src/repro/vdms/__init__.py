@@ -11,12 +11,22 @@ from .datasets import (
 )
 from .engine import LiveVDMS, VDMSInstance, batch_signature, measure_batch
 from .indexes import (
-    INDEX_TYPES,
     IndexBundle,
     build_index,
     concat_bundles,
     frozen_state,
+    replace_segment,
     search_index,
+)
+from .registry import (
+    IndexFamily,
+    get_family,
+    register_family,
+    registered_families,
+    registered_names,
+    registry_table,
+    temporary_family,
+    unregister_family,
 )
 from .segments import SegmentPlan, live_seg_size, plan_segments, stack_sealed
 from .tuning_env import VDMSTuningEnv, make_space
@@ -28,12 +38,24 @@ from .workload import (
     time_aware_ground_truth,
 )
 
+
+def __getattr__(name: str):
+    if name == "INDEX_TYPES":
+        # always the registry keys — never a snapshot that can drift
+        return registered_names()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
-    "DRIFT_SCHEDULES", "INDEX_TYPES", "IndexBundle", "LiveVDMS", "SegmentPlan",
-    "VDMSInstance", "VDMSTuningEnv", "VectorDataset", "WorkloadTrace",
-    "batch_signature", "blend_vectors", "build_index", "concat_bundles",
-    "dataset_names", "exact_topk", "exact_topk_masked", "frozen_state",
-    "live_seg_size", "make_dataset", "make_space", "make_trace", "measure_batch",
-    "plan_segments", "recall_at_k", "recall_at_k_masked", "replay_trace",
-    "search_index", "stack_sealed", "time_aware_ground_truth",
+    "DRIFT_SCHEDULES", "INDEX_TYPES", "IndexBundle", "IndexFamily", "LiveVDMS",
+    "SegmentPlan", "VDMSInstance", "VDMSTuningEnv", "VectorDataset",
+    "WorkloadTrace", "batch_signature", "blend_vectors", "build_index",
+    "concat_bundles", "dataset_names", "exact_topk", "exact_topk_masked",
+    "frozen_state", "get_family", "live_seg_size", "make_dataset", "make_space",
+    "make_trace", "measure_batch", "plan_segments", "recall_at_k",
+    "recall_at_k_masked", "register_family", "registered_families",
+    "registered_names", "registry_table", "replace_segment", "replay_trace",
+    "search_index",
+    "stack_sealed", "temporary_family", "time_aware_ground_truth",
+    "unregister_family",
 ]

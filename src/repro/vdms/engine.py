@@ -28,6 +28,7 @@ from .indexes import (
     replace_segment,
     search_index,
 )
+from .registry import get_family
 from .segments import live_seg_size, plan_segments, stack_sealed
 
 # analytic-mode calibration constants (documented, deterministic)
@@ -48,32 +49,16 @@ def analytic_chunk_seconds(
     batch: int,
 ) -> float:
     """Deterministic cost (seconds) of one query chunk — the shared analytic
-    model behind static ``VDMSInstance.measure`` and live replays. Counts the
-    distance evaluations the search pipeline performs for the current segment
-    state; identical arithmetic to the original per-instance model."""
-    d, b, s = dim, batch, seg_size
-    flops = 0.0
-    steps = 0
-    if kind == "FLAT":
-        flops = n_sealed * s * d * 2
-    elif kind in ("IVF_FLAT", "IVF_SQ8", "AUTOINDEX"):
-        nlist = arrays["centroids"].shape[1]
-        cap = arrays["members"].shape[2]
-        bytes_scale = 0.5 if kind == "IVF_SQ8" else 1.0
-        flops = n_sealed * (nlist * d + st["nprobe"] * cap * d * bytes_scale) * 2
-    elif kind == "IVF_PQ":
-        nlist = arrays["centroids"].shape[1]
-        cap = arrays["members"].shape[2]
-        flops = n_sealed * (
-            nlist * d * 2 + st["m"] * st["c"] * (d // st["m"]) * 2 + st["nprobe"] * cap * st["m"]
-        )
-    elif kind == "HNSW":
-        flops = n_sealed * st["ef"] * st["m_links"] * d * 2
-        steps = st["ef"]
-    elif kind == "SCANN":
-        nlist = arrays["centroids"].shape[1]
-        cap = arrays["members"].shape[2]
-        flops = n_sealed * (nlist * d * 2 + st["nprobe"] * cap * d + st["reorder_k"] * d * 2)
+    model behind static ``VDMSInstance.measure`` and live replays. The
+    per-family FLOP count comes from the registered family's ``chunk_cost``
+    hook (families without one are charged an exhaustive-scan estimate); the
+    rate/overhead arithmetic here is identical to the original model."""
+    d, b = dim, batch
+    family = get_family(kind)
+    if family.chunk_cost is not None:
+        flops, steps = family.chunk_cost(st, arrays, n_sealed, seg_size, d)
+    else:  # conservative default: brute-force scan of every sealed vector
+        flops, steps = n_sealed * seg_size * d * 2, 0
     flops += growing_searched * d * 2  # growing-tail brute force
     flops *= b  # per chunk of b queries
     return (
@@ -97,30 +82,15 @@ def analytic_build_seconds(
     """Deterministic cost (seconds) of sealing + indexing one segment.
 
     ``first_build`` additionally charges the one-off shared-calibration
-    training (PQ codebooks) that incremental builds freeze afterwards.
+    training (PQ codebooks) that incremental builds freeze afterwards. The
+    per-family term comes from the registered family's ``build_cost`` hook
+    (families without one are charged only the storage pass).
     """
     s, d = int(seg_size), int(dim)
-    it = int(config.get("kmeans_iters", 8))
+    family = get_family(index_type)
     flops = float(s * d)  # storage pass
-    if index_type in ("IVF_FLAT", "IVF_SQ8", "IVF_PQ", "SCANN", "AUTOINDEX"):
-        nlist = int(config.get("nlist", max(4, int(np.sqrt(s) * 2))))
-        nlist = int(min(max(nlist, 4), max(s // 8, 4)))
-        flops += it * nlist * s * d * 2
-    if index_type in ("IVF_SQ8", "SCANN"):
-        flops += s * d * 2  # scalar quantization
-    if index_type == "IVF_PQ":
-        m = int(config.get("m", 8))
-        while d % m != 0:
-            m -= 1
-        c = 2 ** int(config.get("nbits", 8))
-        dsub = d // m
-        flops += s * m * c * dsub * 2  # encode
-        if first_build:
-            flops += it * m * c * min(s, 8192) * dsub * 2  # codebook training
-    if index_type == "HNSW":
-        efc = int(min(max(int(config.get("efConstruction", 128)), 16), max(s - 1, 1)))
-        m_links = int(max(4, min(int(config.get("M", 16)), 64)))
-        flops += s * s * d * 2 + s * m_links * efc * d  # exact kNN + pruning
+    if family.build_cost is not None:
+        flops += family.build_cost(config, s, d, bool(first_build))
     return flops / _BUILD_RATE + _BUILD_OVERHEAD
 
 
@@ -369,6 +339,14 @@ class LiveVDMS:
         compact_threshold: float = 0.3,
     ):
         self.config = dict(config)
+        # the seal path is registry-dispatched: resolve the family up front so
+        # unknown types and non-incremental families fail loudly at creation
+        self._family = get_family(config["index_type"])
+        if not self._family.supports_incremental:
+            raise ValueError(
+                f"index family {self._family.name!r} does not support "
+                "incremental (streaming) builds"
+            )
         self.dim = int(dim)
         self.capacity = int(capacity)
         self.seed = int(seed)

@@ -1,0 +1,275 @@
+"""Declarative index-family registry: ONE spec per family drives everything.
+
+An :class:`IndexFamily` carries the complete tuning-facing knowledge about
+one ANNS index family — its tunable :class:`~repro.core.space.Param` specs
+(with defaults), its build/search callables, the calibration arrays frozen
+across incremental builds, capability flags, and the analytic cost-model
+hooks. Every consumer derives from the registry instead of hand-coding
+per-family tables:
+
+* :func:`make_space` derives the holistic ``SearchSpace`` (the paper's
+  non-fixed parameter space, §II-B Table I) from the registered families;
+* ``indexes.build_index`` / ``indexes.search_index`` and the bundle
+  lifecycle ops (``frozen_state`` / ``concat_bundles`` /
+  ``replace_segment``) dispatch through the registry;
+* the engine's analytic search/build cost models ask the family for its
+  FLOP formulas;
+* ``LiveVDMS`` gates the streaming seal path on ``supports_incremental``.
+
+Adding a family is therefore ONE :func:`register_family` call — no edits to
+``core/space.py``, ``tuning_env.py``, or the session layer (see
+``repro.vdms.ivf_pqr`` for a complete worked example, and the README
+"Extending" section).
+
+The seven built-in families register themselves when ``repro.vdms.indexes``
+imports; public lookups here trigger that import lazily so the registry is
+never observed half-populated.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Callable, Dict, Iterator, Optional, Sequence, Tuple
+
+from ..core.space import Param, SearchSpace
+
+#: build(key, segs, gids, params, sys, frozen=None) -> IndexBundle
+BuildFn = Callable[..., Any]
+#: search(q, arrays, *, k_seg, **static) -> (ids, sims), each (n_seg, B, k_seg)
+SearchFn = Callable[..., Tuple[Any, Any]]
+#: chunk_cost(static, arrays, n_sealed, seg_size, dim) -> (flops, seq_steps)
+ChunkCostFn = Callable[[Dict[str, Any], Dict[str, Any], int, int, int], Tuple[float, int]]
+#: build_cost(config, seg_size, dim, first_build) -> flops beyond the storage pass
+BuildCostFn = Callable[[Dict[str, Any], int, int, bool], float]
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexFamily:
+    """One declarative index-family spec (the unit of registration).
+
+    ``build`` must accept ``(key, segs, gids, params, sys, frozen=None)`` and
+    return an ``IndexBundle`` whose ``kind`` equals :attr:`name` (or
+    :attr:`builds_kind` when the family delegates to another family's bundle
+    layout, like AUTOINDEX building IVF_FLAT bundles). ``search`` receives
+    the bundle's arrays and statics as keyword arguments.
+
+    ``shared_arrays`` names the bundle arrays that hold segment-shared
+    calibration state (quantizer scales, PQ codebooks): ``frozen_state``
+    extracts exactly these, incremental builds re-inject them via
+    ``frozen=``, and the bundle lifecycle ops never concatenate them.
+
+    ``chunk_cost`` / ``build_cost`` back the engine's deterministic analytic
+    mode; a family may omit them (``None``) and analytic search cost falls
+    back to an exhaustive-scan estimate while build cost charges only the
+    storage pass.
+    """
+
+    name: str
+    params: Tuple[Param, ...]
+    build: BuildFn
+    search: SearchFn
+    shared_arrays: Tuple[str, ...] = ()
+    supports_frozen: bool = False
+    supports_incremental: bool = True
+    builds_kind: Optional[str] = None  # bundle kind produced by build (default: name)
+    chunk_cost: Optional[ChunkCostFn] = None
+    build_cost: Optional[BuildCostFn] = None
+    description: str = ""
+
+    def __post_init__(self):
+        if not self.name or not self.name.replace("_", "").isalnum():
+            raise ValueError(f"invalid family name {self.name!r}")
+        if not callable(self.build) or not callable(self.search):
+            raise TypeError(f"{self.name}: build and search must be callable")
+        object.__setattr__(self, "params", tuple(self.params))
+        for p in self.params:
+            if not isinstance(p, Param):
+                raise TypeError(f"{self.name}: params must be Param specs, got {p!r}")
+        object.__setattr__(self, "shared_arrays", tuple(self.shared_arrays))
+        if self.supports_frozen and not self.shared_arrays:
+            raise ValueError(
+                f"{self.name}: supports_frozen=True requires shared_arrays naming "
+                "the calibration state to freeze"
+            )
+
+    @property
+    def kind(self) -> str:
+        """Bundle ``kind`` this family's build produces."""
+        return self.builds_kind or self.name
+
+
+class IndexFamilyRegistry:
+    """Ordered name -> :class:`IndexFamily` mapping with a public hook."""
+
+    def __init__(self):
+        self._families: Dict[str, IndexFamily] = {}
+
+    # -- registration ---------------------------------------------------
+    def register(self, family: IndexFamily, *, replace: bool = False) -> IndexFamily:
+        if not isinstance(family, IndexFamily):
+            raise TypeError(f"expected an IndexFamily, got {type(family).__name__}")
+        if family.name in self._families and not replace:
+            raise ValueError(
+                f"index family {family.name!r} is already registered "
+                "(pass replace=True to override)"
+            )
+        if family.builds_kind is not None and family.builds_kind not in self._families:
+            raise ValueError(
+                f"{family.name}: builds_kind={family.builds_kind!r} is not a "
+                f"registered family; registered: {sorted(self._families)}"
+            )
+        self._families[family.name] = family
+        return family
+
+    def unregister(self, name: str) -> IndexFamily:
+        if name not in self._families:
+            raise ValueError(self._unknown(name))
+        return self._families.pop(name)
+
+    @contextlib.contextmanager
+    def temporary(self, family: IndexFamily) -> Iterator[IndexFamily]:
+        """Register ``family`` for the duration of a ``with`` block (tests)."""
+        self.register(family)
+        try:
+            yield family
+        finally:
+            self._families.pop(family.name, None)
+
+    # -- lookup ---------------------------------------------------------
+    def _unknown(self, name: str) -> str:
+        return (
+            f"unknown index family {name!r}; registered families: "
+            f"{sorted(self._families)}"
+        )
+
+    def get(self, name: str) -> IndexFamily:
+        try:
+            return self._families[name]
+        except KeyError:
+            raise ValueError(self._unknown(name)) from None
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(self._families)
+
+    def families(self) -> Tuple[IndexFamily, ...]:
+        return tuple(self._families.values())
+
+    def __contains__(self, name: object) -> bool:
+        return name in self._families
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._families)
+
+    def __len__(self) -> int:
+        return len(self._families)
+
+
+#: The process-wide registry every dispatch path consults.
+REGISTRY = IndexFamilyRegistry()
+
+
+def _ensure_builtins() -> None:
+    # the built-in families register on repro.vdms.indexes import; lazy so
+    # `import repro.vdms.registry` alone never sees a half-populated registry
+    from . import indexes  # noqa: F401
+
+
+# ---------------------------------------------------------------------------
+# public hook
+# ---------------------------------------------------------------------------
+def register_family(family: IndexFamily, *, replace: bool = False) -> IndexFamily:
+    """THE extension point: one call makes a family tunable end-to-end
+    (search space, engine dispatch, streaming seal path, analytic mode)."""
+    _ensure_builtins()
+    return REGISTRY.register(family, replace=replace)
+
+
+def unregister_family(name: str) -> IndexFamily:
+    _ensure_builtins()
+    return REGISTRY.unregister(name)
+
+
+def temporary_family(family: IndexFamily):
+    """Context manager registering ``family`` only inside a ``with`` block."""
+    _ensure_builtins()
+    return REGISTRY.temporary(family)
+
+
+def get_family(name: str) -> IndexFamily:
+    _ensure_builtins()
+    return REGISTRY.get(name)
+
+
+def registered_families() -> Tuple[IndexFamily, ...]:
+    _ensure_builtins()
+    return REGISTRY.families()
+
+
+def registered_names() -> Tuple[str, ...]:
+    _ensure_builtins()
+    return REGISTRY.names()
+
+
+# ---------------------------------------------------------------------------
+# registry-derived search space
+# ---------------------------------------------------------------------------
+_SEGMENT_SIZES = (1024, 2048, 4096, 8192)
+
+#: System parameters shared by every index family (paper §V-A): these are
+#: engine-level knobs, so they live with the registry rather than any family.
+SYSTEM_PARAMS: Tuple[Param, ...] = (
+    Param("segment_max_size", "grid", choices=_SEGMENT_SIZES, default=4096),
+    Param("seal_proportion", "float", 0.1, 1.0, default=0.75),
+    Param("graceful_time", "float", 0.0, 0.9, default=0.2),
+    Param("search_batch_size", "grid", choices=(8, 16, 32, 64, 128), default=32),
+    Param("topk_merge_width", "grid", choices=(16, 32, 64, 128), default=64),
+    Param("kmeans_iters", "grid", choices=(4, 8, 16, 25), default=8),
+    Param("storage_bf16", "cat", choices=(False, True), default=False),
+)
+
+
+def make_space(include: Optional[Sequence[str]] = None) -> SearchSpace:
+    """Derive the holistic search space from the registry.
+
+    With ``include=None`` every registered family contributes its declared
+    ``Param`` specs, in registration order — for the seven built-ins this is
+    bit-identical to the historical hand-coded space (same params, defaults,
+    and encoding-column order, so existing GP checkpoints restore unchanged).
+    ``include`` restricts the space to a subset of families (validated
+    against the registry; registration order is preserved regardless of the
+    order given).
+    """
+    _ensure_builtins()
+    families = REGISTRY.families()
+    if include is not None:
+        wanted = tuple(include)
+        unknown = sorted(set(wanted) - set(REGISTRY.names()))
+        if unknown:
+            raise ValueError(
+                f"unknown index families {unknown}; registered families: "
+                f"{sorted(REGISTRY.names())}"
+            )
+        families = tuple(f for f in families if f.name in wanted)
+        if not families:
+            raise ValueError("include= selected no families")
+    return SearchSpace.from_families(families, SYSTEM_PARAMS)
+
+
+# ---------------------------------------------------------------------------
+# documentation
+# ---------------------------------------------------------------------------
+def registry_table(families: Optional[Sequence[IndexFamily]] = None) -> str:
+    """Markdown table of families (name -> params -> capabilities); the
+    README embeds it between ``registry-table`` markers and a doc-sync test
+    keeps the two in lockstep."""
+    families = tuple(families) if families is not None else registered_families()
+    rows = [
+        "| Family | Index params (default) | Frozen calibration | Incremental |",
+        "|---|---|---|---|",
+    ]
+    for f in families:
+        params = ", ".join(f"`{p.name}`={p.default}" for p in f.params) or "—"
+        frozen = ", ".join(f"`{a}`" for a in f.shared_arrays) if f.supports_frozen else "—"
+        incr = "yes" if f.supports_incremental else "no"
+        rows.append(f"| `{f.name}` | {params} | {frozen} | {incr} |")
+    return "\n".join(rows)

@@ -1,6 +1,11 @@
-"""The VDMS tuning environment: the Milvus-like 16-dimensional search space
-(index type + 8 index parameters + 7 system parameters, paper §V-A) and the
-expensive black-box objective the tuners optimize.
+"""The VDMS tuning environment: the expensive black-box objective the tuners
+optimize over the Milvus-like search space (index type + per-family index
+parameters + 7 system parameters, paper §V-A).
+
+The space itself is no longer hand-coded here: :func:`make_space` (re-exported
+from :mod:`~repro.vdms.registry`) derives it from the declarative index-family
+registry, so a family registered through the public hook is tunable with zero
+edits to this module.
 """
 from __future__ import annotations
 
@@ -10,57 +15,10 @@ from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..core.objectives import TuningFailure
-from ..core.space import Param, SearchSpace
 from .datasets import VectorDataset
 from .engine import VDMSInstance, batch_signature, measure_batch
+from .registry import make_space  # noqa: F401  (registry-derived; re-exported)
 from .workload import WorkloadTrace, replay_trace, time_aware_ground_truth
-
-# ---------------------------------------------------------------------------
-# Search space (16 dims: 1 index type + 8 index params + 7 system params)
-# ---------------------------------------------------------------------------
-_NLIST = (16, 32, 64, 128, 256, 512)
-_NPROBE = (1, 2, 4, 8, 16, 32, 64, 128)
-
-
-def make_space() -> SearchSpace:
-    index_types = {
-        "FLAT": [],
-        "IVF_FLAT": [
-            Param("nlist", "grid", choices=_NLIST, default=128),
-            Param("nprobe", "grid", choices=_NPROBE, default=8),
-        ],
-        "IVF_SQ8": [
-            Param("nlist", "grid", choices=_NLIST, default=128),
-            Param("nprobe", "grid", choices=_NPROBE, default=8),
-        ],
-        "IVF_PQ": [
-            Param("nlist", "grid", choices=_NLIST, default=128),
-            Param("m", "grid", choices=(4, 8, 16, 32), default=8),
-            Param("nbits", "grid", choices=(4, 6, 8), default=8),
-            Param("nprobe", "grid", choices=_NPROBE, default=8),
-        ],
-        "HNSW": [
-            Param("M", "grid", choices=(8, 16, 32, 48), default=16),
-            Param("efConstruction", "grid", choices=(32, 64, 128, 256), default=128),
-            Param("ef", "grid", choices=(16, 32, 64, 128, 256), default=64),
-        ],
-        "SCANN": [
-            Param("nlist", "grid", choices=_NLIST, default=128),
-            Param("nprobe", "grid", choices=_NPROBE, default=8),
-            Param("reorder_k", "grid", choices=(32, 64, 128, 256, 512), default=64),
-        ],
-        "AUTOINDEX": [],
-    }
-    system = [
-        Param("segment_max_size", "grid", choices=(1024, 2048, 4096, 8192), default=4096),
-        Param("seal_proportion", "float", 0.1, 1.0, default=0.75),
-        Param("graceful_time", "float", 0.0, 0.9, default=0.2),
-        Param("search_batch_size", "grid", choices=(8, 16, 32, 64, 128), default=32),
-        Param("topk_merge_width", "grid", choices=(16, 32, 64, 128), default=64),
-        Param("kmeans_iters", "grid", choices=(4, 8, 16, 25), default=8),
-        Param("storage_bf16", "cat", choices=(False, True), default=False),
-    ]
-    return SearchSpace(index_types=index_types, system_params=system)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,434 @@
+"""Registry-parametrized conformance battery.
+
+Every registered index family — the seven built-ins, the public-hook
+``IVF_PQR``, and a throwaway family registered inside this module — gets the
+same checks: build→search shape/gid invariants, encode/decode round-trips of
+every declared ``Param``, frozen-state rebuild equivalence where supported,
+and ``concat_bundles``/``replace_segment`` closure. A new family registered
+through :func:`repro.vdms.register_family` inherits the full battery by
+appearing in ``ALL_FAMILIES`` below.
+
+Also here: the ``INDEX_TYPES``-vs-registry drift test, the dispatch error-UX
+tests, the bit-identity regression of the registry-derived space against the
+pre-registry hand-coded table, the README registry-table doc-sync test, and
+the quick static + streaming ``IVF_PQR`` tuning runs.
+"""
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.vdms as vdms
+from repro.core import TuningSession, VDTuner
+from repro.core.space import Param, SearchSpace
+from repro.vdms import (
+    IndexBundle,
+    IndexFamily,
+    VDMSInstance,
+    VDMSTuningEnv,
+    build_index,
+    concat_bundles,
+    frozen_state,
+    get_family,
+    ivf_pqr,
+    make_dataset,
+    make_space,
+    make_trace,
+    register_family,
+    registered_names,
+    registry_table,
+    replace_segment,
+    replay_trace,
+    search_index,
+    temporary_family,
+    unregister_family,
+)
+from repro.vdms.registry import SYSTEM_PARAMS
+
+BUILTIN_FAMILIES = ("FLAT", "IVF_FLAT", "IVF_SQ8", "IVF_PQ", "HNSW", "SCANN", "AUTOINDEX")
+
+
+# ---------------------------------------------------------------------------
+# a throwaway family, registered through the public hook only: brute force
+# over a strided subsample of each segment (one tunable parameter)
+# ---------------------------------------------------------------------------
+def _build_toy(key, segs, gids, params, sys, frozen=None) -> IndexBundle:
+    stride = int(params["stride"])
+    return IndexBundle(
+        kind="TOY_STRIDED",
+        arrays={
+            "data": jnp.asarray(segs[:, ::stride]),
+            "gids": jnp.asarray(gids[:, ::stride]),
+        },
+        static={"stride": stride},
+    )
+
+
+def _search_toy(q, arrays, *, k_seg: int, stride: int):
+    def per_seg(seg):
+        data, gids = seg
+        sims = jnp.einsum("bd,sd->bs", q, data.astype(jnp.float32))
+        sims = jnp.where(gids[None, :] >= 0, sims, -jnp.inf)
+        k = min(k_seg, sims.shape[1])
+        top_s, top_i = jax.lax.top_k(sims, k)
+        ids = jnp.where(jnp.isfinite(top_s), gids[top_i], -1)
+        top_s = jnp.where(ids >= 0, top_s, -jnp.inf)
+        if k < k_seg:
+            pad = k_seg - k
+            ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+            top_s = jnp.pad(top_s, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        return ids, top_s
+
+    return jax.lax.map(per_seg, (arrays["data"], arrays["gids"]))
+
+
+TOY_FAMILY = IndexFamily(
+    name="TOY_STRIDED",
+    params=(Param("stride", "grid", choices=(1, 2, 4), default=2),),
+    build=_build_toy,
+    search=_search_toy,
+    # no chunk_cost/build_cost on purpose: exercises the engine's fallbacks
+    description="test-only brute force over a strided subsample",
+)
+
+ALL_FAMILIES = BUILTIN_FAMILIES + ("IVF_PQR", "TOY_STRIDED")
+
+
+@pytest.fixture
+def extra_families():
+    """Register the non-builtin families through the public hook, then
+    restore the builtin-only registry."""
+    ivf_pqr.register()
+    register_family(TOY_FAMILY)
+    yield
+    unregister_family(TOY_FAMILY.name)
+    unregister_family(ivf_pqr.FAMILY.name)
+
+
+# ---------------------------------------------------------------------------
+# shared build fixture data
+# ---------------------------------------------------------------------------
+# SEG_SIZE >= 256 so even a single-segment PQ build can train its default
+# 2^8-codeword codebooks (kmeans inits sample points without replacement)
+N_SEG, SEG_SIZE, DIM, N_Q, K_SEG = 2, 288, 16, 8, 16
+SYS = {"kmeans_iters": 4, "storage_bf16": False}
+
+
+def _normed(rng, shape):
+    x = rng.standard_normal(shape).astype(np.float32)
+    return x / np.linalg.norm(x, axis=-1, keepdims=True)
+
+
+@pytest.fixture(scope="module")
+def seg_data():
+    rng = np.random.default_rng(7)
+    segs = _normed(rng, (N_SEG, SEG_SIZE, DIM))
+    gids = np.arange(N_SEG * SEG_SIZE, dtype=np.int32).reshape(N_SEG, SEG_SIZE)
+    queries = jnp.asarray(_normed(rng, (N_Q, DIM)))
+    return segs, gids, queries
+
+
+def _default_params(name):
+    return {p.name: p.default for p in get_family(name).params}
+
+
+def _build(name, segs, gids, seed=0, frozen=None):
+    key = jax.random.PRNGKey(seed)
+    return build_index(key, segs, gids, name, _default_params(name), SYS, frozen=frozen)
+
+
+# ---------------------------------------------------------------------------
+# build -> search invariants
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_FAMILIES)
+def test_build_search_shape_and_gid_invariants(extra_families, seg_data, name):
+    segs, gids, queries = seg_data
+    bundle = _build(name, segs, gids)
+    assert bundle.kind == get_family(name).kind
+    assert bundle.memory_bytes() > 0
+    ids, sims = search_index(bundle, queries, K_SEG)
+    ids, sims = np.asarray(ids), np.asarray(sims)
+    assert ids.shape == (N_SEG, N_Q, K_SEG)
+    assert sims.shape == (N_SEG, N_Q, K_SEG)
+    assert np.issubdtype(ids.dtype, np.integer)
+    valid = ids >= 0
+    assert valid.any(), "search returned no hits at all"
+    assert np.isin(ids[valid], gids.ravel()).all(), "ids outside the segment gids"
+    assert np.isfinite(sims[valid]).all()
+    assert np.all(np.isneginf(sims[~valid])), "padded slots must carry -inf sims"
+
+
+@pytest.mark.parametrize("name", ALL_FAMILIES)
+def test_dispatch_is_transparent(extra_families, seg_data, name):
+    """build_index/search_index are pure registry dispatch: identical arrays
+    to calling the family's own callables directly."""
+    segs, gids, queries = seg_data
+    fam = get_family(name)
+    via_dispatch = _build(name, segs, gids)
+    direct = fam.build(jax.random.PRNGKey(0), segs, gids, _default_params(name), SYS, frozen=None)
+    assert via_dispatch.kind == direct.kind
+    assert via_dispatch.static == direct.static
+    assert set(via_dispatch.arrays) == set(direct.arrays)
+    for k in via_dispatch.arrays:
+        np.testing.assert_array_equal(np.asarray(via_dispatch.arrays[k]), np.asarray(direct.arrays[k]))
+    ids_a, _ = search_index(via_dispatch, queries, K_SEG)
+    ids_b, _ = fam.search(queries, via_dispatch.arrays, k_seg=K_SEG, **via_dispatch.static)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+
+
+# ---------------------------------------------------------------------------
+# Param encode/decode round-trips (hypothesis)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_FAMILIES)
+def test_param_roundtrip_properties(extra_families, name):
+    pytest.importorskip("hypothesis", reason="optional test dep")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    params = get_family(name).params + SYSTEM_PARAMS
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.floats(0.0, 1.0))
+    def check(u):
+        for p in params:
+            if p.kind in ("grid", "cat"):
+                for v in p.choices:
+                    assert p.decode(p.encode(v)) == v
+            v = p.decode(u)
+            if p.kind in ("float", "log_float"):
+                assert p.low - 1e-9 <= v <= p.high + 1e-9
+            snap = p.encode(v)
+            # snapping is idempotent: re-encoding the decoded value is stable
+            assert p.encode(p.decode(snap)) == snap
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# frozen-state rebuild equivalence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_FAMILIES)
+def test_frozen_state_rebuild_equivalence(extra_families, seg_data, name):
+    fam = get_family(name)
+    segs, gids, _ = seg_data
+    b1 = _build(name, segs, gids)
+    frozen = frozen_state(b1)
+    if not fam.supports_frozen:
+        assert frozen == {}
+        return
+    assert set(frozen) == set(fam.shared_arrays) & set(b1.arrays)
+    b2 = _build(name, segs, gids, frozen=frozen)
+    assert b2.static == b1.static
+    for k in b1.arrays:
+        np.testing.assert_array_equal(np.asarray(b1.arrays[k]), np.asarray(b2.arrays[k]))
+
+
+# ---------------------------------------------------------------------------
+# concat / replace closure (the incremental seal + compaction contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL_FAMILIES)
+def test_concat_and_replace_closure(extra_families, seg_data, name):
+    fam = get_family(name)
+    segs, gids, queries = seg_data
+    a = _build(name, segs[:1], gids[:1])
+    b = _build(name, segs[1:], gids[1:], seed=1, frozen=frozen_state(a) or None)
+    merged = concat_bundles(a, b)
+    assert merged.kind == a.kind and merged.static == a.static
+    for k, arr in merged.arrays.items():
+        if k in fam.shared_arrays:
+            np.testing.assert_array_equal(np.asarray(arr), np.asarray(a.arrays[k]))
+        else:
+            assert arr.shape[0] == 2, (k, arr.shape)
+    ids, _ = search_index(merged, queries, K_SEG)
+    assert np.asarray(ids).shape == (2, N_Q, K_SEG)
+
+    # compaction: replace segment 1 with a rebuild over half its survivors
+    survivors = np.array(gids[1:], copy=True)
+    survivors[0, SEG_SIZE // 2 :] = -1
+    seg2 = np.where((survivors >= 0)[..., None], segs[1:], 0.0).astype(np.float32)
+    b2 = _build(name, seg2, survivors, seed=2, frozen=frozen_state(a) or None)
+    spliced = replace_segment(merged, 1, b2)
+    for k, arr in spliced.arrays.items():
+        assert arr.shape == merged.arrays[k].shape, k
+    ids2 = np.asarray(search_index(spliced, queries, K_SEG)[0])
+    seg1_ids = ids2[1]
+    live = seg1_ids[seg1_ids >= 0]
+    assert np.isin(live, survivors[survivors >= 0]).all(), "splice leaked dropped gids"
+
+
+def test_concat_rejects_mismatched_bundles(extra_families, seg_data):
+    segs, gids, _ = seg_data
+    a = _build("FLAT", segs[:1], gids[:1])
+    b = _build("IVF_FLAT", segs[1:], gids[1:])
+    with pytest.raises(ValueError, match="kind/static mismatch"):
+        concat_bundles(a, b)
+
+
+# ---------------------------------------------------------------------------
+# INDEX_TYPES <-> registry drift + error UX
+# ---------------------------------------------------------------------------
+def test_index_types_is_the_registry():
+    """INDEX_TYPES is derived, never a second source of truth."""
+    from repro.vdms import indexes
+
+    assert vdms.INDEX_TYPES == registered_names()
+    assert indexes.INDEX_TYPES == registered_names()
+    with temporary_family(TOY_FAMILY):
+        assert "TOY_STRIDED" in vdms.INDEX_TYPES
+        assert vdms.INDEX_TYPES == registered_names()
+    assert "TOY_STRIDED" not in vdms.INDEX_TYPES
+
+
+def test_unknown_family_errors_list_registered():
+    listing = ", ".join(f"'{n}'" for n in sorted(registered_names()))
+    with pytest.raises(ValueError, match="NOPE") as ei:
+        build_index(jax.random.PRNGKey(0), None, None, "NOPE", {}, {})
+    assert listing in str(ei.value)
+    bogus = IndexBundle(kind="NOPE", arrays={}, static={})
+    with pytest.raises(ValueError, match="NOPE") as ei:
+        search_index(bogus, jnp.zeros((1, 4)), 4)
+    assert listing in str(ei.value)
+
+
+def test_search_space_unknown_type_errors():
+    space = make_space()
+    families = str(sorted(space.index_types))
+    for call in (
+        lambda: space.default_config("NOPE"),
+        lambda: space.encode({"index_type": "NOPE"}),
+        lambda: space.decode(np.zeros(space.dims), index_type="NOPE"),
+        lambda: space.free_mask("NOPE"),
+    ):
+        with pytest.raises(ValueError, match="NOPE") as ei:
+            call()
+        assert families in str(ei.value)
+    with pytest.raises(ValueError, match="NOPE"):
+        make_space(include=("FLAT", "NOPE"))
+
+
+def test_register_family_validates():
+    with pytest.raises(ValueError, match="already registered"):
+        register_family(get_family("FLAT"))
+    with pytest.raises(ValueError, match="supports_frozen"):
+        IndexFamily(
+            name="BAD",
+            params=(),
+            build=_build_toy,
+            search=_search_toy,
+            supports_frozen=True,
+        )
+
+
+# ---------------------------------------------------------------------------
+# registry-derived space == pre-registry hand-coded space (bit-identical)
+# ---------------------------------------------------------------------------
+def _pre_registry_space() -> SearchSpace:
+    """Verbatim copy of the hand-coded table `make_space` used before the
+    registry redesign — the checkpoint-compatibility reference."""
+    _NLIST = (16, 32, 64, 128, 256, 512)
+    _NPROBE = (1, 2, 4, 8, 16, 32, 64, 128)
+    index_types = {
+        "FLAT": [],
+        "IVF_FLAT": [
+            Param("nlist", "grid", choices=_NLIST, default=128),
+            Param("nprobe", "grid", choices=_NPROBE, default=8),
+        ],
+        "IVF_SQ8": [
+            Param("nlist", "grid", choices=_NLIST, default=128),
+            Param("nprobe", "grid", choices=_NPROBE, default=8),
+        ],
+        "IVF_PQ": [
+            Param("nlist", "grid", choices=_NLIST, default=128),
+            Param("m", "grid", choices=(4, 8, 16, 32), default=8),
+            Param("nbits", "grid", choices=(4, 6, 8), default=8),
+            Param("nprobe", "grid", choices=_NPROBE, default=8),
+        ],
+        "HNSW": [
+            Param("M", "grid", choices=(8, 16, 32, 48), default=16),
+            Param("efConstruction", "grid", choices=(32, 64, 128, 256), default=128),
+            Param("ef", "grid", choices=(16, 32, 64, 128, 256), default=64),
+        ],
+        "SCANN": [
+            Param("nlist", "grid", choices=_NLIST, default=128),
+            Param("nprobe", "grid", choices=_NPROBE, default=8),
+            Param("reorder_k", "grid", choices=(32, 64, 128, 256, 512), default=64),
+        ],
+        "AUTOINDEX": [],
+    }
+    system = [
+        Param("segment_max_size", "grid", choices=(1024, 2048, 4096, 8192), default=4096),
+        Param("seal_proportion", "float", 0.1, 1.0, default=0.75),
+        Param("graceful_time", "float", 0.0, 0.9, default=0.2),
+        Param("search_batch_size", "grid", choices=(8, 16, 32, 64, 128), default=32),
+        Param("topk_merge_width", "grid", choices=(16, 32, 64, 128), default=64),
+        Param("kmeans_iters", "grid", choices=(4, 8, 16, 25), default=8),
+        Param("storage_bf16", "cat", choices=(False, True), default=False),
+    ]
+    return SearchSpace(index_types=index_types, system_params=system)
+
+
+def test_registry_space_bit_identical_to_pre_registry_table():
+    old, new = _pre_registry_space(), make_space()
+    assert new.type_names == old.type_names == BUILTIN_FAMILIES
+    assert new.system_params == old.system_params
+    assert [(c, o) for c, o, _ in new._cols] == [(c, o) for c, o, _ in old._cols]
+    assert [p for _, _, p in new._cols] == [p for _, _, p in old._cols]
+    assert new.dims == old.dims
+    rng = np.random.default_rng(0)
+    for cfg in old.sample(rng, 64) + [old.default_config(t) for t in old.type_names]:
+        np.testing.assert_array_equal(new.encode(cfg), old.encode(cfg))
+        np.testing.assert_array_equal(new.free_mask(cfg["index_type"]), old.free_mask(cfg["index_type"]))
+
+
+# ---------------------------------------------------------------------------
+# IVF_PQR end-to-end: quick static + streaming tuning through the session
+# ---------------------------------------------------------------------------
+def test_ivf_pqr_static_tuning_quick(extra_families):
+    ds = make_dataset("glove_like", n=1536, n_queries=16, k=10, seed=0)
+    env = VDMSTuningEnv(ds, mode="analytic", seed=0)
+    space = make_space(include=("IVF_PQR",))
+    tuner = VDTuner(space, env, seed=0)
+    TuningSession(tuner).run(4)
+    assert len(tuner.Y) == 4
+    assert max(y[1] for y in tuner.Y) > 0.3  # re-rank should retrieve well
+    # the exact re-rank must not hurt recall vs the plain ADC scan
+    cfg = space.default_config("IVF_PQR")
+    plain = dict(cfg, index_type="IVF_PQ")
+    plain.pop("reorder_k")
+    r_pqr = VDMSInstance(ds, cfg, seed=0).measure(repeats=1, mode="analytic")
+    r_pq = VDMSInstance(ds, plain, seed=0).measure(repeats=1, mode="analytic")
+    assert r_pqr["recall"] >= r_pq["recall"] - 1e-9
+
+
+def test_ivf_pqr_streaming_tuning_quick(extra_families):
+    trace = make_trace("glove_like", n_base=600, n_ops=160, seed=0, mix=(0.3, 0.6, 0.1))
+    space = make_space(include=("IVF_PQR",))
+    cfg = dict(space.default_config("IVF_PQR"), segment_max_size=512, seal_proportion=0.5)
+    result = replay_trace(trace, cfg, seed=0, mode="analytic")
+    assert result["n_seals"] >= 1, "trace too small to exercise the seal path"
+    assert result["recall"] > 0.2
+    env = VDMSTuningEnv(trace=trace, workload="streaming", mode="analytic", seed=0)
+    tuner = VDTuner(space, env, seed=0)
+    TuningSession(tuner).run(3)
+    assert len(tuner.Y) == 3
+
+
+# ---------------------------------------------------------------------------
+# README doc-sync: the registry table in the docs is generated, not typed
+# ---------------------------------------------------------------------------
+def test_readme_registry_table_in_sync():
+    readme = pathlib.Path(__file__).resolve().parents[1] / "README.md"
+    text = readme.read_text()
+    begin, end = "<!-- registry-table:begin -->", "<!-- registry-table:end -->"
+    assert begin in text and end in text, "README lost the registry-table markers"
+    block = text.split(begin, 1)[1].split(end, 1)[0].strip()
+    families = list(vdms.registered_families())
+    if ivf_pqr.FAMILY.name not in registered_names():
+        families.append(ivf_pqr.FAMILY)
+    assert block == registry_table(families).strip(), (
+        "README registry table is stale; regenerate it with: python -c "
+        "'from repro.vdms import registry_table, ivf_pqr; "
+        "ivf_pqr.register(); print(registry_table())'"
+    )
