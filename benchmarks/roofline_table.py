@@ -1,4 +1,5 @@
-"""Build the EXPERIMENTS.md §Roofline table from dry-run artifacts."""
+"""Build the EXPERIMENTS.md §Roofline table from dry-run artifacts, plus the
+end-to-end search-pipeline table from ``bench_kernels --json`` records."""
 from __future__ import annotations
 
 import json
@@ -67,7 +68,31 @@ def multipod_table(d="experiments/dryrun") -> str:
     return "\n".join(lines)
 
 
+def search_pipeline_table(path="BENCH_fused.json") -> str:
+    """Render the per-family fused-vs-composed pipeline records written by
+    ``benchmarks.bench_kernels --json`` as a markdown table (end-to-end
+    per-chunk wall time, not per-op micro numbers)."""
+    p = Path(path)
+    if not p.exists():
+        return f"(no pipeline records at {path} — run benchmarks.bench_kernels --json)"
+    records = json.loads(p.read_text())
+    lines = [
+        "| family | composed ms/chunk | fused ms/chunk | speedup | fused QPS | recall@10 |",
+        "|---|---|---|---|---|---|",
+    ]
+    for fam in sorted(records):
+        r = records[fam]
+        tag = "" if r.get("fused_hook") else " (fallback)"
+        lines.append(
+            f"| {fam}{tag} | {r['composed_ms_chunk']:.2f} | {r['fused_ms_chunk']:.2f} "
+            f"| {r['speedup']:.2f}x | {r['fused_qps']:.0f} | {r['recall']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     print(markdown_table())
     print()
     print(multipod_table())
+    print()
+    print(search_pipeline_table())

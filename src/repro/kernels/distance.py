@@ -14,6 +14,14 @@ Grid: (Q/bq, N/bn, D/bk), accumulating over the last (arbitrary) axis.
 VMEM working set per step: bq*bk + bn*bk + bq*bn floats — the default tile
 (128, 512, 128) uses ~0.6 MB, comfortably inside a v5e core's ~16 MB VMEM
 with double buffering.
+
+Memory-layout contract (shared by every kernel in this package, see
+``docs/KERNELS.md``): operands arrive row-major and are zero-padded up to
+the block multiple on every tiled axis by the host-side wrapper — padded
+query rows produce garbage rows that the wrapper slices off, padded D
+columns contribute zero to the contraction, and padded N columns are cut by
+the final slice. All accumulation is f32 in VMEM scratch regardless of the
+storage dtype.
 """
 from __future__ import annotations
 

@@ -16,6 +16,7 @@ from functools import partial
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from . import ref
 
@@ -65,6 +66,79 @@ def pq_adc(lut, codes, impl: Optional[str] = None):
     from .pq_adc import pq_adc_pallas
 
     return pq_adc_pallas(lut, codes, interpret=impl == "pallas_interpret")
+
+
+@partial(jax.jit, static_argnames=("nprobe", "k", "mask_dead", "impl"))
+def fused_ivf_sq8_topk(q, codes, scale, centroids, members, gids, *,
+                       nprobe: int, k: int, mask_dead: bool = False,
+                       impl: Optional[str] = None):
+    """Fused IVF probe → int8 dequant scan → top-k over stacked segments.
+
+    q (B, d); codes (n_seg, s, d) int8; scale (d,); centroids
+    (n_seg, nlist, d); members (n_seg, nlist, cap); gids (n_seg, s)
+    -> (lids, sims), each (n_seg, B, k) with -1/-inf empty slots.
+
+    Candidate SETS and scores match across impls (and the composed
+    per-family search); slot ORDER among tied scores is impl-defined.
+    ``mask_dead`` drops gid<0 slots before the top-k (the clamped static
+    merge); default keeps them, mirroring the composed post-top-k masking.
+    """
+    impl = _resolve(impl)
+    from .fused_scan import (
+        fused_ivf_sq8_topk_pallas,
+        fused_ivf_sq8_topk_xla,
+        members_to_cluster_of,
+    )
+
+    if impl == "xla":
+        return jax.vmap(
+            lambda c, ce, me, g: fused_ivf_sq8_topk_xla(
+                q, c, scale, ce, me, g, nprobe=nprobe, k=k, mask_dead=mask_dead
+            )
+        )(codes, centroids, members, gids)
+    interp = impl == "pallas_interpret"
+    outs = [
+        fused_ivf_sq8_topk_pallas(
+            q, codes[z], scale, centroids[z],
+            members_to_cluster_of(members[z], codes.shape[1]), gids[z],
+            nprobe=nprobe, k=k, mask_dead=mask_dead, interpret=interp,
+        )
+        for z in range(codes.shape[0])
+    ]
+    return jnp.stack([o[0] for o in outs]), jnp.stack([o[1] for o in outs])
+
+
+@partial(jax.jit, static_argnames=("nprobe", "k", "mask_dead", "impl"))
+def fused_ivf_pq_topk(q, lut, codes, centroids, members, gids, *,
+                      nprobe: int, k: int, mask_dead: bool = False,
+                      impl: Optional[str] = None):
+    """Fused IVF probe → PQ ADC scan → top-k over stacked segments.
+
+    q (B, d); lut (B, m, c) f32 ADC similarity table; codes (n_seg, s, m)
+    integer; centroids (n_seg, nlist, d); members (n_seg, nlist, cap);
+    gids (n_seg, s) -> (lids, sims), each (n_seg, B, k). Same set/order
+    contract as :func:`fused_ivf_sq8_topk`.
+    """
+    impl = _resolve(impl)
+    from .fused_adc import fused_ivf_pq_topk_pallas, fused_ivf_pq_topk_xla
+    from .fused_scan import members_to_cluster_of
+
+    if impl == "xla":
+        return jax.vmap(
+            lambda c, ce, me, g: fused_ivf_pq_topk_xla(
+                q, lut, c, ce, me, g, nprobe=nprobe, k=k, mask_dead=mask_dead
+            )
+        )(codes, centroids, members, gids)
+    interp = impl == "pallas_interpret"
+    outs = [
+        fused_ivf_pq_topk_pallas(
+            q, lut, codes[z], centroids[z],
+            members_to_cluster_of(members[z], codes.shape[1]), gids[z],
+            nprobe=nprobe, k=k, mask_dead=mask_dead, interpret=interp,
+        )
+        for z in range(codes.shape[0])
+    ]
+    return jnp.stack([o[0] for o in outs]), jnp.stack([o[1] for o in outs])
 
 
 @partial(jax.jit, static_argnames=("causal", "window", "impl"))

@@ -13,6 +13,13 @@ subquantizer axis in a VMEM scratch.
 
 VMEM per step (defaults bq=128, bn=512, c<=256): onehot 512x256 f32 (512 KB)
 + lut 128x256 (128 KB) + acc 128x512 (256 KB) — well inside v5e VMEM.
+
+Memory-layout contract (shared by every kernel in this package, see
+``docs/KERNELS.md``): row-major operands, zero-padded to block multiples by
+the host-side wrapper. Padded code rows are zero-filled and select LUT entry
+0 — their garbage scores live only in rows the wrapper slices off; padded
+LUT columns are never selected because real codes are < c. Accumulation is
+f32 in VMEM scratch.
 """
 from __future__ import annotations
 

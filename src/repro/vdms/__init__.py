@@ -9,7 +9,14 @@ from .datasets import (
     recall_at_k,
     recall_at_k_masked,
 )
-from .engine import LiveVDMS, VDMSInstance, batch_signature, measure_batch
+from .engine import (
+    LiveVDMS,
+    VDMSInstance,
+    batch_signature,
+    get_search_pipeline,
+    measure_batch,
+    set_search_pipeline,
+)
 from .indexes import (
     IndexBundle,
     build_index,
@@ -20,6 +27,7 @@ from .indexes import (
 )
 from .registry import (
     IndexFamily,
+    fused_pipeline_table,
     get_family,
     register_family,
     registered_families,
@@ -51,11 +59,12 @@ __all__ = [
     "SegmentPlan", "VDMSInstance", "VDMSTuningEnv", "VectorDataset",
     "WorkloadTrace", "batch_signature", "blend_vectors", "build_index",
     "concat_bundles", "dataset_names", "exact_topk", "exact_topk_masked",
-    "frozen_state", "get_family", "live_seg_size", "make_dataset", "make_space",
+    "frozen_state", "fused_pipeline_table", "get_family", "get_search_pipeline",
+    "live_seg_size", "make_dataset", "make_space",
     "make_trace", "measure_batch", "plan_segments", "recall_at_k",
     "recall_at_k_masked", "register_family", "registered_families",
     "registered_names", "registry_table", "replace_segment", "replay_trace",
-    "search_index",
+    "search_index", "set_search_pipeline",
     "stack_sealed", "temporary_family", "time_aware_ground_truth",
     "unregister_family",
 ]

@@ -94,8 +94,55 @@ def analytic_build_seconds(
     return flops / _BUILD_RATE + _BUILD_OVERHEAD
 
 
-def _pipeline_impl(qc, arrays, growing, growing_gids, kind, statics, k_seg, topk):
-    """qc: (n_chunks, B, d) queries; returns (n_chunks, B, topk) global ids."""
+# ---------------------------------------------------------------------------
+# search-pipeline mode (fused vs composed)
+# ---------------------------------------------------------------------------
+#: process-wide pipeline selector, read OUTSIDE jit and passed as a static
+#: argument (a module global read inside a traced function would not retrace)
+_SEARCH_PIPELINE = "fused"
+
+
+def set_search_pipeline(mode: str) -> None:
+    """Select the search hot path: ``"fused"`` (default) routes chunks through
+    a family's registered ``fused_search`` hook when it has one, ``"composed"``
+    always runs the per-family ``search`` + generic merge. Families without a
+    hook run composed either way, so "fused" is always safe to leave on."""
+    global _SEARCH_PIPELINE
+    if mode not in ("fused", "composed"):
+        raise ValueError(f"unknown search pipeline {mode!r}; use 'fused' or 'composed'")
+    _SEARCH_PIPELINE = mode
+
+
+def get_search_pipeline() -> str:
+    return _SEARCH_PIPELINE
+
+
+def _pipeline_impl(
+    qc, arrays, growing, growing_gids, kind, statics, k_seg, topk, fused=False, clamp=False
+):
+    """qc: (n_chunks, B, d) queries; returns (n_chunks, B, topk) global ids.
+
+    ``fused=True`` dispatches through the family's registered ``fused_search``
+    hook (all chunks flattened into one batched call); families without a
+    hook — and segment-less instances — fall back to the composed path below,
+    whose results are unchanged by this routing. ``clamp=True`` (set only when
+    the instance's sealed segments carry no -1 padding) lets the hook narrow
+    per-segment width to ``min(k_seg, topk)``; see ``repro.vdms.fused``.
+    """
+    family = get_family(kind)
+    if fused and family.fused_search is not None and arrays["gids"].shape[0] > 0:
+        n_chunks, b, d = qc.shape
+        out = family.fused_search(
+            qc.reshape(n_chunks * b, d),
+            arrays,
+            growing,
+            growing_gids,
+            k_seg=k_seg,
+            topk=topk,
+            clamp=clamp,
+            **dict(statics),
+        )
+        return out.reshape(n_chunks, b, topk)
     bundle = IndexBundle(kind=kind, arrays=arrays, static=dict(statics))
 
     def chunk_fn(q):
@@ -119,9 +166,9 @@ def _pipeline_impl(qc, arrays, growing, growing_gids, kind, statics, k_seg, topk
     return jax.lax.map(chunk_fn, qc)
 
 
-_pipeline = partial(jax.jit, static_argnames=("kind", "statics", "k_seg", "topk"))(
-    _pipeline_impl
-)
+_pipeline = partial(
+    jax.jit, static_argnames=("kind", "statics", "k_seg", "topk", "fused", "clamp")
+)(_pipeline_impl)
 
 
 @partial(jax.jit, static_argnames=("kind", "statics", "k_seg", "topk"))
@@ -129,7 +176,9 @@ def _pipeline_batch(qc, arrays, growing, growing_gids, kind, statics, k_seg, top
     """Vectorized multi-config dispatch: every per-instance operand carries a
     leading batch axis (arrays values, growing, growing_gids); the query chunks
     are shared. Returns (B, n_chunks, b, topk) global ids in ONE compiled
-    program, amortizing dispatch + compile across the batch."""
+    program, amortizing dispatch + compile across the batch. Always runs the
+    composed pipeline: fused hooks are a single-instance fast path and the
+    vmapped stack is already one fused program."""
 
     def one(arrays_i, growing_i, gids_i):
         return _pipeline_impl(qc, arrays_i, growing_i, gids_i, kind, statics, k_seg, topk)
@@ -165,6 +214,12 @@ class VDMSInstance:
         self.build_time = time.perf_counter() - t0
         self.k_seg = int(config["topk_merge_width"])
         self.batch = int(config["search_batch_size"])
+        # the fused top-k clamp is exact only when every sealed slot is real:
+        # a trailing partial seal pads with -1 gids, whose dead slots must
+        # keep consuming merge width to match the composed path bit-for-bit
+        self._clamp_ok = bool(
+            np.all(np.asarray(self.plan.sealed_valid) == self.plan.seg_size)
+        )
 
     # ------------------------------------------------------------------
     def _chunked_queries(self, queries: np.ndarray) -> jnp.ndarray:
@@ -187,6 +242,8 @@ class VDMSInstance:
             tuple(sorted(self.bundle.static.items())),
             self.k_seg,
             topk,
+            get_search_pipeline() == "fused",
+            self._clamp_ok,
         )
         out = np.asarray(out).reshape(-1, topk)[: queries.shape[0]]
         return out
@@ -235,6 +292,8 @@ class VDMSInstance:
                 tuple(sorted(self.bundle.static.items())),
                 self.k_seg,
                 topk,
+                get_search_pipeline() == "fused",
+                self._clamp_ok,
             )
             for _ in range(repeats):
                 t0 = time.perf_counter()
@@ -254,12 +313,31 @@ class VDMSInstance:
 # ---------------------------------------------------------------------------
 # live (streaming) instance
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("kind", "statics", "k_seg", "topk"))
-def _live_chunk(q, arrays, alive_g, growing, growing_gids, kind, statics, k_seg, topk):
+@partial(jax.jit, static_argnames=("kind", "statics", "k_seg", "topk", "fused"))
+def _live_chunk(
+    q, arrays, alive_g, growing, growing_gids, kind, statics, k_seg, topk, fused=False
+):
     """One query chunk against the live state: sealed segments searched via
     their indexes, the visible growing tail brute-forced, tombstones and
     padded slots filtered through the global ``alive_g`` mask at merge time
-    (index -1 maps to the always-dead sentinel slot ``alive_g[-1]``)."""
+    (index -1 maps to the always-dead sentinel slot ``alive_g[-1]``).
+
+    ``fused=True`` routes through the family's ``fused_search`` hook with
+    ``alive=alive_g`` (the hook replicates this merge); live searches never
+    clamp — compacted segments carry -1 padding that must consume width."""
+    family = get_family(kind)
+    if fused and family.fused_search is not None and arrays["gids"].shape[0] > 0:
+        return family.fused_search(
+            q,
+            arrays,
+            growing,
+            growing_gids,
+            k_seg=k_seg,
+            topk=topk,
+            clamp=False,
+            alive=alive_g,
+            **dict(statics),
+        )
     bundle = IndexBundle(kind=kind, arrays=arrays, static=dict(statics))
     sentinel = alive_g.shape[0] - 1
     ids, sims = search_index(bundle, q, k_seg)  # (n_seg, B, k_seg)
@@ -522,6 +600,7 @@ class LiveVDMS:
         ggids[: vis.size] = vis
         growing_j, ggids_j = jnp.asarray(growing), jnp.asarray(ggids)
         alive_j = jnp.asarray(self.alive)
+        use_fused = get_search_pipeline() == "fused"
 
         def dispatch(chunk: np.ndarray) -> np.ndarray:
             if self.bundle is None:
@@ -544,11 +623,14 @@ class LiveVDMS:
                         tuple(sorted(self.bundle.static.items())),
                         self.k_seg,
                         topk,
+                        use_fused,
                     )
                 )
             )
 
-        shape_key = (self.n_sealed if self.bundle is not None else -1, nb, b, topk)
+        shape_key = (
+            self.n_sealed if self.bundle is not None else -1, nb, b, topk, use_fused
+        )
         out = np.empty((n_chunks * b, topk), np.int32)
         elapsed = 0.0
         for c in range(n_chunks):

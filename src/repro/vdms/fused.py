@@ -1,0 +1,203 @@
+"""Fused per-family search pipelines (the registry ``fused_search`` hooks).
+
+Each hook replaces one family's *entire* per-chunk hot path — IVF probe,
+candidate scoring, per-segment top-k, global-id mapping, and the merge with
+the growing tail — with a single call into the fused kernel layer
+(:mod:`repro.kernels.fused_scan` / :mod:`repro.kernels.fused_adc` via the
+``ops`` impl switch: XLA reference on CPU, Pallas on TPU). The engine
+dispatches here whenever the family registered a hook and the session
+pipeline mode is ``"fused"``; families without a hook transparently fall
+back to their composed ``search`` callable.
+
+Result contract (what the engine relies on):
+
+* the returned ``(B, topk)`` global ids are SET-identical per query to the
+  composed path's output — same candidates survive, same growing-tail merge,
+  same -1 padding — with slot order among *tied* scores impl-defined;
+* under the XLA impl the IVF_PQ and IVF_PQR scores are bit-identical to the
+  composed scan (the flat-LUT lookup sums subquantizers in the same order),
+  while IVF_SQ8 may differ in the last ulp (full-tile matmul vs gathered
+  einsum associate the d-reduction differently);
+* ``clamp=True`` (static instances whose sealed segments carry no ``-1``
+  padding, see ``VDMSInstance._clamp_ok``) narrows the per-segment width to
+  ``min(k_seg, topk)`` — exact because only ``topk`` results survive the
+  merge and no dead slot can consume width; live searches never clamp;
+* ``alive`` selects the merge flavor: ``None`` replicates the static
+  ``_pipeline_impl`` chunk merge, a mask replicates ``_live_chunk``'s
+  tombstone filtering (sentinel slot, masked growing gids, -1 on -inf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+
+
+def _map_gids(gids, lids):
+    """Map per-segment local ids (n_seg, B, k) to global ids via each
+    segment's gid row; empty slots (lid < 0) map to -1."""
+    ids = jax.vmap(lambda g, l: g[jnp.maximum(l, 0)])(gids, lids)
+    return jnp.where(lids >= 0, ids, -1)
+
+
+def _merge_static(ids, sims, q, growing, growing_gids, topk):
+    """Merge per-segment results with the growing tail — line-for-line the
+    composed ``_pipeline_impl`` chunk merge (dead slots arrive as -1/-inf
+    and consume merge width exactly as in the composed path)."""
+    n_seg, b, ks = ids.shape
+    ids2 = jnp.moveaxis(ids, 0, 1).reshape(b, n_seg * ks)
+    sims2 = jnp.moveaxis(sims, 0, 1).reshape(b, n_seg * ks)
+    if growing.shape[0] > 0:
+        gs = jnp.dot(q, growing.T.astype(q.dtype), preferred_element_type=jnp.float32)
+        gk = min(topk, growing.shape[0])
+        gtop_s, gtop_i = jax.lax.top_k(gs, gk)
+        ids2 = jnp.concatenate([ids2, growing_gids[gtop_i]], axis=1)
+        sims2 = jnp.concatenate([sims2, gtop_s], axis=1)
+    k = min(topk, sims2.shape[1])
+    top_s, top_i = jax.lax.top_k(sims2, k)
+    out = jnp.take_along_axis(ids2, top_i, axis=1)
+    if k < topk:
+        out = jnp.pad(out, ((0, 0), (0, topk - k)), constant_values=-1)
+    return out
+
+
+def _merge_live(ids, sims, q, growing, growing_gids, alive, topk):
+    """Merge with tombstone filtering — line-for-line ``_live_chunk``:
+    global ids gated through ``alive`` (id -1 hits the always-dead sentinel
+    slot), growing gids masked, -inf survivors reported as -1."""
+    sentinel = alive.shape[0] - 1
+    n_seg, b, ks = ids.shape
+    ids2 = jnp.moveaxis(ids, 0, 1).reshape(b, n_seg * ks)
+    sims2 = jnp.moveaxis(sims, 0, 1).reshape(b, n_seg * ks)
+    ok = alive[jnp.where(ids2 >= 0, ids2, sentinel)]
+    sims2 = jnp.where(ok, sims2, -jnp.inf)
+    if growing.shape[0] > 0:
+        gs = jnp.dot(q, growing.T.astype(q.dtype), preferred_element_type=jnp.float32)
+        gs = jnp.where(growing_gids[None, :] >= 0, gs, -jnp.inf)
+        gk = min(topk, growing.shape[0])
+        gtop_s, gtop_i = jax.lax.top_k(gs, gk)
+        ids2 = jnp.concatenate([ids2, growing_gids[gtop_i]], axis=1)
+        sims2 = jnp.concatenate([sims2, gtop_s], axis=1)
+    k = min(topk, sims2.shape[1])
+    top_s, top_i = jax.lax.top_k(sims2, k)
+    out = jnp.take_along_axis(ids2, top_i, axis=1)
+    out = jnp.where(jnp.isfinite(top_s), out, -1)
+    if k < topk:
+        out = jnp.pad(out, ((0, 0), (0, topk - k)), constant_values=-1)
+    return out
+
+
+def _finish(lids, sims, gids, q, growing, growing_gids, alive, topk):
+    """Shared epilogue: local→global ids, dead-slot masking (gid < 0 slots
+    keep their width but turn -1/-inf, mirroring the composed post-top-k
+    mask), then the static or live merge."""
+    ids = _map_gids(gids, lids)
+    sims = jnp.where(ids >= 0, sims, -jnp.inf)
+    if alive is None:
+        return _merge_static(ids, sims, q, growing, growing_gids, topk)
+    return _merge_live(ids, sims, q, growing, growing_gids, alive, topk)
+
+
+# ---------------------------------------------------------------------------
+# per-family hooks
+# ---------------------------------------------------------------------------
+def fused_search_ivf_sq8(
+    q, arrays, growing, growing_gids, *, k_seg, topk, clamp=False, alive=None, nprobe
+):
+    """IVF_SQ8: fused probe → int8 dequant scan → in-kernel top-k."""
+    clamped = clamp and alive is None
+    k_eff = min(k_seg, topk) if clamped else k_seg
+    lids, sims = ops.fused_ivf_sq8_topk(
+        q,
+        arrays["codes"],
+        arrays["scale"],
+        arrays["centroids"],
+        arrays["members"],
+        arrays["gids"],
+        nprobe=nprobe,
+        k=k_eff,
+        mask_dead=clamped,
+    )
+    return _finish(lids, sims, arrays["gids"], q, growing, growing_gids, alive, topk)
+
+
+fused_search_ivf_sq8.stages = "probe → int8 dequant scan → top-k"
+
+
+def fused_search_ivf_pq(
+    q, arrays, growing, growing_gids, *, k_seg, topk, clamp=False, alive=None, nprobe, m, c
+):
+    """IVF_PQ: fused probe → flat-LUT ADC scan → in-kernel top-k."""
+    clamped = clamp and alive is None
+    k_eff = min(k_seg, topk) if clamped else k_seg
+    b, d = q.shape
+    lut = jnp.einsum("bmd,mcd->bmc", q.reshape(b, m, d // m), arrays["codebooks"])
+    lids, sims = ops.fused_ivf_pq_topk(
+        q,
+        lut,
+        arrays["codes"],
+        arrays["centroids"],
+        arrays["members"],
+        arrays["gids"],
+        nprobe=nprobe,
+        k=k_eff,
+        mask_dead=clamped,
+    )
+    return _finish(lids, sims, arrays["gids"], q, growing, growing_gids, alive, topk)
+
+
+fused_search_ivf_pq.stages = "probe → PQ ADC scan → top-k"
+
+
+def fused_search_ivf_pqr(
+    q,
+    arrays,
+    growing,
+    growing_gids,
+    *,
+    k_seg,
+    topk,
+    clamp=False,
+    alive=None,
+    nprobe,
+    m,
+    c,
+    reorder_k,
+):
+    """IVF_PQR: fused PQ candidate scan (width ``reorder_k``, never clamped —
+    dead slots consume reorder width exactly as composed) → exact re-rank
+    against the raw vectors → clamped per-segment top-k."""
+    clamped = clamp and alive is None
+    k_eff = min(k_seg, topk) if clamped else k_seg
+    b, d = q.shape
+    lut = jnp.einsum("bmd,mcd->bmc", q.reshape(b, m, d // m), arrays["codebooks"])
+    lids, _ = ops.fused_ivf_pq_topk(
+        q,
+        lut,
+        arrays["codes"],
+        arrays["centroids"],
+        arrays["members"],
+        arrays["gids"],
+        nprobe=nprobe,
+        k=reorder_k,
+        mask_dead=False,
+    )  # (n_seg, B, r): the PQ stage only ranks; its scores are discarded
+
+    def rerank(data_z, lids_z):
+        vecs = data_z[jnp.maximum(lids_z, 0)].astype(jnp.float32)  # (B, r, d)
+        exact = jnp.einsum("brd,bd->br", vecs, q)
+        return jnp.where(lids_z >= 0, exact, -jnp.inf)
+
+    exact = jax.vmap(rerank)(arrays["data"], lids)  # (n_seg, B, r)
+    kk = min(k_eff, exact.shape[-1])
+    top_s, top_i = jax.lax.top_k(exact, kk)
+    lids2 = jnp.take_along_axis(lids, top_i, axis=2)
+    if kk < k_eff:
+        pad = ((0, 0), (0, 0), (0, k_eff - kk))
+        lids2 = jnp.pad(lids2, pad, constant_values=-1)
+        top_s = jnp.pad(top_s, pad, constant_values=-jnp.inf)
+    return _finish(lids2, top_s, arrays["gids"], q, growing, growing_gids, alive, topk)
+
+
+fused_search_ivf_pqr.stages = "probe → PQ ADC scan → exact re-rank → top-k"

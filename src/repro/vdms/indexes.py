@@ -36,6 +36,7 @@ import numpy as np
 
 from ..core.space import Param
 from ..kernels import ops
+from .fused import fused_search_ivf_pq, fused_search_ivf_sq8
 from .kmeans import kmeans, kmeans_l2
 from .registry import REGISTRY, IndexFamily, get_family
 
@@ -727,6 +728,7 @@ REGISTRY.register(
         build=build_ivf_sq8,
         search=_search_ivf_sq8,
         shared_arrays=("scale",),
+        fused_search=fused_search_ivf_sq8,
         supports_frozen=True,
         chunk_cost=_chunk_cost_ivf(0.5),
         build_cost=_build_cost_sq,
@@ -745,6 +747,7 @@ REGISTRY.register(
         build=build_ivf_pq,
         search=_search_ivf_pq,
         shared_arrays=("codebooks",),
+        fused_search=fused_search_ivf_pq,
         supports_frozen=True,
         chunk_cost=_chunk_cost_ivf_pq,
         build_cost=_build_cost_ivf_pq,

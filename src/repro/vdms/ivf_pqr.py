@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.space import Param
+from .fused import fused_search_ivf_pqr
 from .indexes import (
     _NLIST,
     _NPROBE,
@@ -112,6 +113,7 @@ FAMILY = IndexFamily(
     build=build_ivf_pqr,
     search=search_ivf_pqr,
     shared_arrays=("codebooks",),
+    fused_search=fused_search_ivf_pqr,
     supports_frozen=True,
     chunk_cost=_chunk_cost_ivf_pqr,
     build_cost=_build_cost_ivf_pq,  # re-rank stores raw vectors; build cost is PQ's

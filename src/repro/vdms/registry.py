@@ -41,6 +41,9 @@ SearchFn = Callable[..., Tuple[Any, Any]]
 ChunkCostFn = Callable[[Dict[str, Any], Dict[str, Any], int, int, int], Tuple[float, int]]
 #: build_cost(config, seg_size, dim, first_build) -> flops beyond the storage pass
 BuildCostFn = Callable[[Dict[str, Any], int, int, bool], float]
+#: fused_search(q, arrays, growing, growing_gids, *, k_seg, topk,
+#:              clamp=False, alive=None, **static) -> (B, topk) global ids
+FusedSearchFn = Callable[..., Any]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +65,14 @@ class IndexFamily:
     mode; a family may omit them (``None``) and analytic search cost falls
     back to an exhaustive-scan estimate while build cost charges only the
     storage pass.
+
+    ``fused_search`` is the OPTIONAL fused-pipeline hook: a callable
+    replacing the whole per-chunk hot path (probe, scan, per-segment top-k,
+    gid mapping, growing-tail merge) in one fused call — see
+    ``repro.vdms.fused`` and ``docs/KERNELS.md``. Families that omit it
+    (``None``) always run their composed ``search`` through the engine's
+    generic merge; the engine falls back automatically, so registering a
+    hook is purely a performance opt-in with identical result sets.
     """
 
     name: str
@@ -69,6 +80,7 @@ class IndexFamily:
     build: BuildFn
     search: SearchFn
     shared_arrays: Tuple[str, ...] = ()
+    fused_search: Optional[FusedSearchFn] = None
     supports_frozen: bool = False
     supports_incremental: bool = True
     builds_kind: Optional[str] = None  # bundle kind produced by build (default: name)
@@ -91,6 +103,8 @@ class IndexFamily:
                 f"{self.name}: supports_frozen=True requires shared_arrays naming "
                 "the calibration state to freeze"
             )
+        if self.fused_search is not None and not callable(self.fused_search):
+            raise TypeError(f"{self.name}: fused_search must be callable or None")
 
     @property
     def kind(self) -> str:
@@ -272,4 +286,23 @@ def registry_table(families: Optional[Sequence[IndexFamily]] = None) -> str:
         frozen = ", ".join(f"`{a}`" for a in f.shared_arrays) if f.supports_frozen else "—"
         incr = "yes" if f.supports_incremental else "no"
         rows.append(f"| `{f.name}` | {params} | {frozen} | {incr} |")
+    return "\n".join(rows)
+
+
+def fused_pipeline_table(families: Optional[Sequence[IndexFamily]] = None) -> str:
+    """Markdown table of per-family search pipelines (fused vs composed);
+    the README embeds it between ``fused-table`` markers and a doc-sync test
+    keeps the two in lockstep. ``Fused stages`` comes from the hook's
+    ``stages`` attribute so the table always reflects the registered code."""
+    families = tuple(families) if families is not None else registered_families()
+    rows = [
+        "| Family | Search pipeline | Fused stages | Frozen calibration |",
+        "|---|---|---|---|",
+    ]
+    for f in families:
+        fused = f.fused_search is not None
+        pipe = "fused (composed fallback)" if fused else "composed"
+        stages = getattr(f.fused_search, "stages", "—") if fused else "—"
+        frozen = ", ".join(f"`{a}`" for a in f.shared_arrays) if f.supports_frozen else "—"
+        rows.append(f"| `{f.name}` | {pipe} | {stages} | {frozen} |")
     return "\n".join(rows)

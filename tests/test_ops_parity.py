@@ -69,3 +69,102 @@ def test_impl_switch_roundtrip():
         )
     finally:
         ops.set_default_impl(before)
+
+
+# ---------------------------------------------------------------------------
+# fused search pipelines (probe -> scan -> in-kernel top-k)
+# ---------------------------------------------------------------------------
+def _ivf_fixture(n_seg, s, d, nlist, nprobe, dead_tail=0, seed=3):
+    """Segments + centroids + member lists + gids for the fused ops, built
+    with the same member-list layout (capacity-bound, -1 padded) the real
+    IVF builds use."""
+    from repro.vdms.indexes import _ivf_cap, _member_lists
+
+    rng = np.random.default_rng(seed)
+    segs = rng.standard_normal((n_seg, s, d)).astype(np.float32)
+    assign = rng.integers(0, nlist, (n_seg, s))
+    cents = np.stack([
+        np.stack([
+            segs[z][assign[z] == l].mean(0) if (assign[z] == l).any() else np.zeros(d)
+            for l in range(nlist)
+        ])
+        for z in range(n_seg)
+    ]).astype(np.float32)
+    cap = _ivf_cap(s, nlist, nprobe)
+    members = np.stack([_member_lists(assign[z], nlist, cap) for z in range(n_seg)])
+    gids = np.arange(n_seg * s, dtype=np.int32).reshape(n_seg, s)
+    if dead_tail:
+        gids[:, -dead_tail:] = -1
+    return segs, cents, members, gids
+
+
+def _assert_topk_sets_match(a, b, atol=2e-4):
+    """Fused contract: candidate SETS and scores match; tie order may not."""
+    (la, sa), (lb, sb) = a, b
+    la, sa, lb, sb = map(np.asarray, (la, sa, lb, sb))
+    assert la.shape == lb.shape and sa.shape == sb.shape
+    for z in range(la.shape[0]):
+        for i in range(la.shape[1]):
+            fa = {int(v) for v, x in zip(la[z, i], sa[z, i]) if np.isfinite(x)}
+            fb = {int(v) for v, x in zip(lb[z, i], sb[z, i]) if np.isfinite(x)}
+            assert fa == fb, f"lid sets differ at seg {z} row {i}: {fa ^ fb}"
+            np.testing.assert_allclose(
+                np.sort(sa[z, i][np.isfinite(sa[z, i])]),
+                np.sort(sb[z, i][np.isfinite(sb[z, i])]),
+                atol=atol,
+            )
+
+
+@pytest.mark.parametrize(
+    "s,nlist,nprobe,k,dead,mask_dead",
+    [
+        (100, 10, 3, 16, 0, False),   # n < block size
+        (256, 8, 4, 10, 0, False),    # exactly block-aligned n
+        (120, 6, 2, 400, 20, False),  # k > candidate pool, dead slots kept
+        (120, 6, 2, 12, 20, True),    # dead slots dropped pre-top-k
+    ],
+)
+def test_fused_sq8_topk_parity(s, nlist, nprobe, k, dead, mask_dead):
+    d, b = 40, 5
+    segs, cents, members, gids = _ivf_fixture(2, s, d, nlist, nprobe, dead_tail=dead)
+    scale = (np.abs(segs).max(axis=(0, 1)) / 127.0 + 1e-12).astype(np.float32)
+    codes = np.clip(np.round(segs / scale), -127, 127).astype(np.int8)
+    q = np.random.default_rng(4).standard_normal((b, d)).astype(np.float32)
+    args = (jnp.asarray(q), jnp.asarray(codes), jnp.asarray(scale),
+            jnp.asarray(cents), jnp.asarray(members), jnp.asarray(gids))
+    kw = dict(nprobe=nprobe, k=k, mask_dead=mask_dead)
+    _assert_topk_sets_match(
+        ops.fused_ivf_sq8_topk(*args, impl="pallas_interpret", **kw),
+        ops.fused_ivf_sq8_topk(*args, impl="xla", **kw),
+    )
+
+
+@pytest.mark.parametrize(
+    "s,nlist,nprobe,k,dead,mask_dead",
+    [
+        (100, 10, 3, 16, 0, False),
+        (256, 8, 4, 10, 0, False),
+        (120, 6, 2, 400, 20, True),
+    ],
+)
+def test_fused_pq_topk_parity(s, nlist, nprobe, k, dead, mask_dead):
+    d, b, m, c = 40, 5, 4, 16
+    segs, cents, members, gids = _ivf_fixture(2, s, d, nlist, nprobe, dead_tail=dead)
+    rng = np.random.default_rng(5)
+    dsub = d // m
+    cb = (rng.standard_normal((m, c, dsub)) * 0.1).astype(np.float32)
+    x = segs.reshape(-1, m, dsub)
+    codes = np.empty((segs.shape[0], s, m), np.uint8)
+    for j in range(m):
+        d2 = (np.sum(x[:, j] ** 2, 1)[:, None] - 2 * x[:, j] @ cb[j].T
+              + np.sum(cb[j] ** 2, 1)[None, :])
+        codes[..., j] = np.argmin(d2, 1).astype(np.uint8).reshape(segs.shape[0], s)
+    q = rng.standard_normal((b, d)).astype(np.float32)
+    lut = np.einsum("bmd,mcd->bmc", q.reshape(b, m, dsub), cb).astype(np.float32)
+    args = (jnp.asarray(q), jnp.asarray(lut), jnp.asarray(codes),
+            jnp.asarray(cents), jnp.asarray(members), jnp.asarray(gids))
+    kw = dict(nprobe=nprobe, k=k, mask_dead=mask_dead)
+    _assert_topk_sets_match(
+        ops.fused_ivf_pq_topk(*args, impl="pallas_interpret", **kw),
+        ops.fused_ivf_pq_topk(*args, impl="xla", **kw),
+    )
