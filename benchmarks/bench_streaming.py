@@ -230,8 +230,11 @@ def _oracle_ground_truth(trace, k):
     return out
 
 
-def check_invariants(seed: int = 0, mode: str = "analytic") -> list:
-    """Returns a list of failure strings (empty = all invariants hold)."""
+def check_invariants(seed: int = 0, mode: str = "analytic"):
+    """Returns ``(failures, summary)``: a list of failure strings (empty =
+    all invariants hold) plus a replay summary — the engine's structured
+    lifecycle snapshot (``LiveVDMS.stats()``) and the serving-facing
+    throughput/latency numbers (QPS with p50/p99 percentiles)."""
     failures = []
     trace = make_trace(
         "glove_like",
@@ -258,6 +261,13 @@ def check_invariants(seed: int = 0, mode: str = "analytic") -> list:
         failures.append(f"sealed-segment count decreased: {live.seal_history}")
     if live.n_seals < 1:
         failures.append("trace too small: no seal event exercised")
+    summary = {
+        "stats": live.stats(),
+        "qps": result["speed"],
+        "lat_p50_s": result["lat_p50_s"],
+        "lat_p99_s": result["lat_p99_s"],
+        "recall": result["recall"],
+    }
 
     gt_fast = time_aware_ground_truth(trace)
     gt_oracle = _oracle_ground_truth(trace, trace.k)
@@ -269,7 +279,7 @@ def check_invariants(seed: int = 0, mode: str = "analytic") -> list:
     r_oracle = replay_trace(trace, cfg, seed=seed, mode=mode, ground_truth=gt_oracle)
     if abs(r_fast["recall"] - r_oracle["recall"]) > 1e-12:
         failures.append(f"recall accounting diverges from oracle: " f"{r_fast['recall']} vs {r_oracle['recall']}")
-    return failures
+    return failures, summary
 
 
 def run(seed: int = 0, quick: bool = True, schedules=SCHEDULES, mode: str = "analytic", index_types=None):
@@ -321,10 +331,18 @@ def main(argv=None) -> int:
     out = {"quick": bool(args.quick), "seed": args.seed, "mode": args.mode,
            "sizes": _sizes(args.quick), "index_types": args.index_types, "schedules": {}}
     if args.check_invariants:
-        failures = check_invariants(seed=args.seed, mode=args.mode)
-        out["invariants"] = {"ok": not failures, "failures": failures}
+        failures, summary = check_invariants(seed=args.seed, mode=args.mode)
+        out["invariants"] = {"ok": not failures, "failures": failures, "replay": summary}
         for f in failures:
             print(f"INVARIANT FAILED: {f}", file=sys.stderr)
+        print(
+            f"invariants replay: qps={summary['qps']:.1f} "
+            f"p50={summary['lat_p50_s'] * 1e3:.3f}ms "
+            f"p99={summary['lat_p99_s'] * 1e3:.3f}ms "
+            f"seals={summary['stats']['n_seals']} "
+            f"compactions={summary['stats']['n_compactions']} "
+            f"tombstones={summary['stats']['tombstone_fraction']:.3f}"
+        )
     out["schedules"] = run(
         seed=args.seed,
         quick=args.quick,

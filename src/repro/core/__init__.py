@@ -28,6 +28,7 @@ from .objectives import (
     cost_aware,
     cost_aware_transform,
     default_transform,
+    promotion_score,
     recall_floor,
     speed_recall,
     streaming_sustained,
@@ -56,7 +57,8 @@ __all__ = [
     "cost_aware", "cost_aware_transform", "default_transform", "ehvi_mc",
     "ehvi_mc_jax", "ei", "ei_jax", "fused_cei_select", "fused_qehvi_select",
     "greedy_select", "hv_2d", "hvi_2d", "hvi_2d_jax", "max_base",
-    "non_dominated_mask", "npi_normalize", "pareto_front", "qehvi_sequential_greedy",
+    "non_dominated_mask", "npi_normalize", "pareto_front", "promotion_score",
+    "qehvi_sequential_greedy",
     "recall_floor", "scores_by_hv_influence", "speed_recall", "streaming_sustained",
     "sustained_transform",
 ]

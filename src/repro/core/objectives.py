@@ -150,6 +150,24 @@ def streaming_sustained(alpha: float = 1.0, rlim: float | None = None) -> Object
     )
 
 
+def promotion_score(
+    raw: RawResult, rlim: float | None = None, alpha: float = 1.0
+) -> Tuple[float, float]:
+    """SLO-constrained lexicographic score for shadow/canary comparisons.
+
+    Returns ``(feasible, value)`` meant for tuple comparison: a config
+    meeting the recall floor always beats one that does not; among feasible
+    configs sustained QPS decides (``alpha`` weighs ingest overhead exactly
+    as in :func:`sustained_transform`); among infeasible configs the higher
+    recall wins — the least-bad candidate while the floor is unreachable.
+    The serving controller promotes a canary iff its score strictly exceeds
+    the incumbent's.
+    """
+    qps, recall = sustained_transform(alpha)(raw)
+    feasible = rlim is None or recall >= rlim
+    return (1.0 if feasible else 0.0, qps if feasible else recall)
+
+
 #: Registry of built-in objective factories (name -> factory).
 OBJECTIVES: Dict[str, Callable[..., ObjectiveSpec]] = {
     "speed_recall": speed_recall,

@@ -369,19 +369,30 @@ class TuningSession:
     # ------------------------------------------------------------------
     # drift tracking (moving-optimum workloads)
     # ------------------------------------------------------------------
-    def probe_drift(self, detector: DriftDetector, config: Config) -> bool:
+    def probe_drift(
+        self,
+        detector: DriftDetector,
+        config: Config,
+        raw: Optional[Dict[str, float]] = None,
+    ) -> bool:
         """Re-measure the deployed ``config`` through the backend and feed
         the drift detector. Probes live outside the tuning budget and the
         recommend/eval ledger — they are deployment monitoring, not BO
         iterations. An incumbent that now *fails* outright counts as drift.
+
+        With ``raw`` given the backend is not called: the supplied
+        measurement (e.g. the serving control plane's windowed live metrics)
+        is judged directly, so probes can come from real traffic instead of
+        a synthetic re-evaluation.
         """
-        try:
-            raw = self.backend(config)
-        except TuningFailure:
-            detector.n_fired += 1
-            # finite sentinel keeps detector state/artifacts strict-JSON safe
-            detector.log.append({"metrics": {}, "rel": 1e9, "fired": True, "failed": True})
-            return True
+        if raw is None:
+            try:
+                raw = self.backend(config)
+            except TuningFailure:
+                detector.n_fired += 1
+                # finite sentinel keeps detector state/artifacts strict-JSON safe
+                detector.log.append({"metrics": {}, "rel": 1e9, "fired": True, "failed": True})
+                return True
         return detector.observe(raw)
 
     def retune(
@@ -481,6 +492,22 @@ class TuningSession:
             "rounds": copy.deepcopy(self.rounds),
         }
 
+    def load_state_dict(self, state: Dict[str, Any]) -> "TuningSession":
+        """In-place restore of a ``state_dict()`` checkpoint onto this
+        session (tuner state included); backend, executor and callbacks are
+        untouched. This is the rollback half of the serving control plane's
+        canary protocol: snapshot before a candidate retune, load back on a
+        losing canary — bit-identical to never having retuned.
+        """
+        version = state.get("version")
+        if version != STATE_VERSION:
+            raise ValueError(f"unsupported session state version {version!r}")
+        self.tuner.load_state_dict(state["tuner"])
+        self._pending = [dict(c) for c in state.get("pending", [])]
+        self._pending_recommend_s = float(state.get("pending_recommend_s", 0.0))
+        self.rounds = copy.deepcopy(state.get("rounds", []))
+        return self
+
     @classmethod
     def restore(
         cls,
@@ -498,15 +525,8 @@ class TuningSession:
         checkpoint). The continuation is bit-identical to an uninterrupted
         run for deterministic backends.
         """
-        version = state.get("version")
-        if version != STATE_VERSION:
-            raise ValueError(f"unsupported session state version {version!r}")
-        tuner.load_state_dict(state["tuner"])
         session = cls(tuner, backend=backend, executor=executor, callbacks=callbacks)
-        session._pending = [dict(c) for c in state.get("pending", [])]
-        session._pending_recommend_s = float(state.get("pending_recommend_s", 0.0))
-        session.rounds = copy.deepcopy(state.get("rounds", []))
-        return session
+        return session.load_state_dict(state)
 
 
 def checkpoint_every(

@@ -58,7 +58,23 @@ class Param:
         if self.kind == "int":
             return float((value - self.low) / (self.high - self.low))
         if self.kind in ("grid", "cat"):
-            idx = self.choices.index(value)
+            try:
+                idx = self.choices.index(value)
+            except ValueError:
+                # off-grid numeric observation (e.g. a hand-tuned serving
+                # config re-anchored through retune): embed at the nearest
+                # choice — the surrogate needs *some* cell for a measured
+                # config it could never itself propose
+                if not isinstance(value, (int, float)) or isinstance(value, bool):
+                    raise
+                numeric = [
+                    (i, c)
+                    for i, c in enumerate(self.choices)
+                    if isinstance(c, (int, float)) and not isinstance(c, bool)
+                ]
+                if not numeric:
+                    raise
+                idx = min(numeric, key=lambda ic: abs(ic[1] - value))[0]
             return (idx + 0.5) / len(self.choices)
         raise ValueError(self.kind)
 

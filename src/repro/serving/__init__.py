@@ -1,0 +1,51 @@
+"""Autonomous serving control plane for a live VDMS deployment.
+
+Three pieces close the loop between serving and tuning:
+
+* :mod:`~repro.serving.metrics` — a Prometheus-style metrics ledger
+  (counters / gauges / histograms with text exposition and JSON dumps) fed
+  by the live engine's per-search instrumentation hooks.
+* :mod:`~repro.serving.slo` — declarative SLO guardrails (recall floor, p99
+  latency budget, memory cap) evaluated over sliding windows of live
+  measurements.
+* :mod:`~repro.serving.controller` — the :class:`ServingController` loop:
+  SLO breaches and drift trigger a re-tune, candidates deploy as shadow
+  instances with mirrored traffic, and promotion is decided on the
+  SLO-constrained score — with checkpoint-exact session rollback for losing
+  canaries.
+
+See README "Serving control plane".
+"""
+from .controller import ControllerParams, GidMappedVDMS, ServingController
+from .metrics import (
+    DEFAULT_BUCKETS,
+    UNIT_BUCKETS,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsLedger,
+    attach_live,
+    observe_stats,
+    percentiles,
+    serving_ledger,
+)
+from .slo import SLOMonitor, SLOSpec, SLOStatus
+
+__all__ = [
+    "Counter",
+    "ControllerParams",
+    "DEFAULT_BUCKETS",
+    "Gauge",
+    "GidMappedVDMS",
+    "Histogram",
+    "MetricsLedger",
+    "SLOMonitor",
+    "SLOSpec",
+    "SLOStatus",
+    "ServingController",
+    "UNIT_BUCKETS",
+    "attach_live",
+    "observe_stats",
+    "percentiles",
+    "serving_ledger",
+]

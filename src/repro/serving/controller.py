@@ -1,0 +1,604 @@
+"""The autonomous serving control plane: SLO-guarded shadow/canary retune.
+
+:class:`ServingController` wraps a live serving instance and a
+:class:`~repro.core.session.TuningSession` into a closed loop:
+
+1. **Serve + observe** — replay live traffic through the primary instance,
+   feeding per-query latencies, recall probes and lifecycle stats into the
+   metrics ledger and the :class:`~repro.serving.slo.SLOMonitor`.
+2. **Trigger** — at control ticks, evaluate the SLO guardrails (and an
+   optional :class:`~repro.core.session.DriftDetector` fed with the same
+   live window); any breach or drift firing triggers a re-tune.
+3. **Retune in shadow** — snapshot the session, re-enter BO on a trailing
+   window of the live trace (``TuningSession.retune``), build the candidate
+   config as a *shadow* instance bootstrapped from the primary's visible
+   vectors (build cost charged via the analytic model), and mirror a slice
+   of live traffic to both instances (dual-index, the pgvector migration
+   pattern).
+4. **Promote or roll back** — after the canary window, compare both arms on
+   the SLO-constrained :func:`~repro.core.objectives.promotion_score`.
+   A winning shadow becomes the primary (the old index is dropped); a losing
+   one is dropped and the session checkpoint is restored **bit-identically**
+   (``TuningSession.load_state_dict``) — as if the candidate never existed.
+
+Trace timestamps are normalized to [0, 1]; the report scales time-integrated
+quantities (SLO violation time, recall-under-floor time) by
+``trace_minutes`` so they read as violation-minutes.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.objectives import promotion_score
+from ..core.session import DriftDetector, TuningSession
+from ..vdms.datasets import recall_at_k_masked
+from ..vdms.engine import LiveVDMS
+from ..vdms.tuning_env import VDMSTuningEnv
+from ..vdms.workload import (
+    OP_INSERT,
+    OP_SEARCH,
+    WorkloadTrace,
+    time_aware_ground_truth,
+)
+from .metrics import MetricsLedger, attach_live, observe_stats, serving_ledger
+from .slo import SLOMonitor, SLOSpec
+
+
+class GidMappedVDMS:
+    """A :class:`LiveVDMS` addressed by trace-global ids.
+
+    A shadow instance is bootstrapped mid-trace from the primary's visible
+    vectors, so its local id space is dense while the trace speaks global
+    ids; this wrapper carries the local<->global maps for inserts, deletes
+    and search results. The initial primary uses the same wrapper with an
+    identity bootstrap, so both arms run one code path. (Engine gids are
+    stable across tombstones and compaction — survivors keep their ids — so
+    the maps never go stale.)
+    """
+
+    def __init__(
+        self,
+        config: Dict[str, Any],
+        dim: int,
+        capacity: int,
+        seed: int = 0,
+        compact_threshold: float = 0.3,
+    ):
+        self.config = dict(config)
+        self.live = LiveVDMS(
+            config, dim, capacity, seed=seed, compact_threshold=compact_threshold
+        )
+        # local -> global; the extra sentinel slot keeps -1 mapping to -1
+        self._gid_of = np.full(capacity + 1, -1, np.int64)
+        self._local_of: Dict[int, int] = {}
+
+    def bootstrap(self, vectors: np.ndarray, gids: np.ndarray) -> None:
+        gids = np.asarray(gids, np.int64)
+        if vectors.shape[0] != gids.shape[0]:
+            raise ValueError("bootstrap vectors/gids length mismatch")
+        self.live.bootstrap(vectors)
+        self._gid_of[: gids.size] = gids
+        self._local_of = {int(g): i for i, g in enumerate(gids)}
+
+    def insert(self, gid: int, vec: np.ndarray) -> None:
+        loc = int(self.live.insert(vec)[0])
+        self._gid_of[loc] = int(gid)
+        self._local_of[int(gid)] = loc
+
+    def delete(self, gid: int) -> bool:
+        loc = self._local_of.get(int(gid), -1)
+        return self.live.delete(loc) if loc >= 0 else False
+
+    def search(
+        self, queries: np.ndarray, topk: int, mode: str = "analytic"
+    ) -> Tuple[np.ndarray, float]:
+        ids, secs = self.live.search(queries, topk, mode=mode)
+        out = np.where(ids >= 0, self._gid_of[ids], -1).astype(np.int32)
+        return out, secs
+
+    def visible_gids(self) -> np.ndarray:
+        """Trace-global ids of every vector currently visible to searches."""
+        local = self.live.visible_ids()
+        return self._gid_of[local].astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerParams:
+    """Control-loop knobs (op counts are trace operations, not seconds)."""
+
+    check_every: int = 48  # ops between control ticks
+    cooldown_ops: int = 96  # no new trigger this many ops after a decision
+    retune_iters: int = 8  # fresh BO evaluations per retune
+    retune_window_ops: int = 400  # trailing trace window the retune env replays
+    min_window_searches: int = 12  # skip retune when the window has no signal
+    canary_queries: int = 48  # mirrored queries before promote-or-rollback
+    traffic_mirror: float = 1.0  # fraction of each canary flush mirrored
+    alpha: float = 1.0  # ingest weight in the promotion score
+    min_win_margin: float = 0.0  # candidate must beat primary by this rel. margin
+    build_amortize_queries: int = 10_000  # horizon the shadow build is amortized over
+    floor_margin: float = 0.01  # extra recall headroom required on the retune window
+    repair_anchors: bool = True  # reanchor retunes with breach-repair variants
+
+    def __post_init__(self):
+        if not 0.0 < self.traffic_mirror <= 1.0:
+            raise ValueError(
+                f"traffic_mirror must be in (0, 1], got {self.traffic_mirror}"
+            )
+        if min(self.canary_queries, self.retune_iters, self.check_every) < 1:
+            raise ValueError("canary_queries, retune_iters, check_every must be >= 1")
+
+
+class _Canary:
+    """One in-flight canary: the shadow arm plus mirrored-slice stats."""
+
+    def __init__(self, shadow: GidMappedVDMS, snapshot: Dict[str, Any], op: int):
+        self.shadow = shadow
+        self.snapshot = snapshot
+        self.started_op = op
+        self.mirrored = 0
+        self.primary_lat: List[float] = []
+        self.shadow_lat: List[float] = []
+        self.primary_recall: List[float] = []
+        self.shadow_recall: List[float] = []
+        self.primary_seal0 = 0.0
+        self.shadow_seal0 = 0.0
+
+
+class ServingController:
+    """Autonomous SLO-guarded serving over a live workload trace.
+
+    Parameters
+    ----------
+    slo:
+        The declarative guardrails (:class:`SLOSpec`).
+    session:
+        A :class:`TuningSession` whose tuner supplies retune candidates; its
+        backend is swapped to a trailing-window streaming env at each retune.
+        Optional when serving with ``guard=False`` (monitor-only baseline).
+    detector:
+        Optional :class:`DriftDetector` fed with windowed live metrics at
+        every control tick — drift then triggers retunes alongside breaches.
+    ledger:
+        Metrics ledger; a fresh :func:`serving_ledger` by default.
+    mode:
+        ``"analytic"`` (deterministic cost model; default) or ``"wall"``.
+    trace_minutes:
+        Wall-clock minutes one unit of normalized trace time represents —
+        the scale behind ``violation_minutes`` in the report.
+    """
+
+    def __init__(
+        self,
+        slo: SLOSpec,
+        session: Optional[TuningSession] = None,
+        detector: Optional[DriftDetector] = None,
+        ledger: Optional[MetricsLedger] = None,
+        params: Optional[ControllerParams] = None,
+        mode: str = "analytic",
+        seed: int = 0,
+        trace_minutes: float = 60.0,
+        compact_threshold: float = 0.3,
+    ):
+        self.slo = slo
+        self.session = session
+        self.detector = detector
+        self.ledger = ledger if ledger is not None else serving_ledger()
+        self.params = params if params is not None else ControllerParams()
+        self.mode = mode
+        self.seed = int(seed)
+        self.trace_minutes = float(trace_minutes)
+        self.compact_threshold = float(compact_threshold)
+        self.monitor = SLOMonitor(slo)
+        self.timeline: List[Dict[str, Any]] = []
+        self.n_retunes = 0
+        self.n_promotes = 0
+        self.n_rollbacks = 0
+        # lifecycle counter offsets across promotes (ledger counters stay
+        # monotone even though a fresh instance's counts restart at zero)
+        self._life_off = {"n_seals": 0.0, "n_compactions": 0.0}
+
+    # ------------------------------------------------------------------
+    # session snapshot / rollback (checkpoint-exact)
+    # ------------------------------------------------------------------
+    def _snapshot(self) -> Dict[str, Any]:
+        return {
+            "state": copy.deepcopy(self.session.state_dict()),
+            "backend": self.session.backend,
+        }
+
+    def _restore(self, snap: Dict[str, Any]) -> None:
+        self.session.load_state_dict(snap["state"])
+        self.session.backend = snap["backend"]
+
+    def _event(self, kind: str, op: int, t: float, **extra: Any) -> None:
+        self.timeline.append({"event": kind, "op": int(op), "time": float(t), **extra})
+
+    # ------------------------------------------------------------------
+    # the loop
+    # ------------------------------------------------------------------
+    def serve(
+        self,
+        trace: WorkloadTrace,
+        config: Dict[str, Any],
+        ground_truth: Optional[np.ndarray] = None,
+        guard: bool = True,
+    ) -> Dict[str, Any]:
+        """Replay ``trace`` under the control loop, starting from ``config``.
+
+        ``guard=False`` runs the monitor-only baseline: identical serving,
+        SLO accounting and ledger, but breaches never trigger retunes — the
+        frozen arm the serving benchmark compares against.
+        """
+        if guard and self.session is None:
+            raise ValueError("guarded serving requires a session (tuner) to retune with")
+        p = self.params
+        k = trace.k
+        gt = (
+            ground_truth
+            if ground_truth is not None
+            else time_aware_ground_truth(trace, k)
+        )
+        primary = GidMappedVDMS(
+            config, trace.dim, trace.capacity, seed=self.seed,
+            compact_threshold=self.compact_threshold,
+        )
+        primary.bootstrap(trace.base, np.arange(trace.n_base))
+        attach_live(self.ledger, primary.live)
+        config = dict(config)
+        config_history = [{"op": 0, "time": 0.0, "config": dict(config)}]
+
+        preds = -np.ones((trace.n_searches, k), np.int32)
+        lat_all: List[np.ndarray] = []
+        search_s = 0.0
+        canary: Optional[_Canary] = None
+        pending: List[int] = []
+        last_tick_op = 0
+        last_tick_time = 0.0
+        cooldown_until = -1
+        violation_time = 0.0
+        recall_floor_time = 0.0
+        breached_now = False
+        recall_breached_now = False
+        recall_probe = self.ledger.histogram("vdms_recall_probe")
+
+        def promote(c: _Canary, op_i: int, t: float, p_score, c_score) -> None:
+            nonlocal primary, config, cooldown_until
+            stats = primary.live.stats()
+            self._life_off["n_seals"] += stats["n_seals"]
+            self._life_off["n_compactions"] += stats["n_compactions"]
+            primary = c.shadow  # the old index is dropped here
+            config = dict(c.shadow.config)
+            attach_live(self.ledger, primary.live)
+            config_history.append(
+                {"op": int(op_i), "time": float(t), "config": dict(config)}
+            )
+            self.n_promotes += 1
+            self.ledger.counter("vdms_promote_total").inc()
+            self.monitor.reset()
+            if self.detector is not None:
+                self.detector.reset()
+            cooldown_until = op_i + p.cooldown_ops
+            self._event(
+                "promote", op_i, t,
+                primary_score=list(p_score), candidate_score=list(c_score),
+            )
+
+        def rollback(c: _Canary, op_i: int, t: float, p_score, c_score) -> None:
+            nonlocal cooldown_until
+            self._restore(c.snapshot)
+            self.n_rollbacks += 1
+            self.ledger.counter("vdms_rollback_total").inc()
+            cooldown_until = op_i + p.cooldown_ops
+            self._event(
+                "rollback", op_i, t,
+                primary_score=list(p_score), candidate_score=list(c_score),
+            )
+
+        def decide(c: _Canary, op_i: int, t: float) -> None:
+            nonlocal canary
+            p_busy = float(np.sum(c.primary_lat))
+            c_busy = float(np.sum(c.shadow_lat))
+            p_seal = max(primary.live.seal_build_model_s - c.primary_seal0, 0.0)
+            c_seal = max(c.shadow.live.seal_build_model_s - c.shadow_seal0, 0.0)
+            # the shadow's bootstrap build cost, amortized over the horizon a
+            # promoted config is expected to live (the analytic build model)
+            amort = c.mirrored / max(p.build_amortize_queries, 1)
+            c_build = c.shadow.live.bootstrap_build_model_s * amort
+            n = float(c.mirrored)
+            p_raw = {
+                "speed": n / max(p_busy, 1e-12),
+                "recall": float(np.mean(c.primary_recall)),
+                "n_searches": n,
+                "search_s": p_busy,
+                "seal_build_s": p_seal,
+            }
+            c_raw = {
+                "speed": n / max(c_busy, 1e-12),
+                "recall": float(np.mean(c.shadow_recall)),
+                "n_searches": n,
+                "search_s": c_busy,
+                "seal_build_s": c_seal + c_build,
+            }
+            p_score = promotion_score(p_raw, rlim=self.slo.recall_floor, alpha=p.alpha)
+            c_score = promotion_score(c_raw, rlim=self.slo.recall_floor, alpha=p.alpha)
+            wins = c_score[0] > p_score[0] or (
+                c_score[0] == p_score[0]
+                and c_score[1] > p_score[1] * (1.0 + p.min_win_margin)
+            )
+            if wins:
+                promote(c, op_i, t, p_score, c_score)
+            else:
+                rollback(c, op_i, t, p_score, c_score)
+            canary = None
+
+        def flush(op_i: int) -> None:
+            nonlocal search_s
+            if not pending:
+                return
+            rows = np.asarray(pending, np.int64)
+            pending.clear()
+            q = trace.queries[rows]
+            ids, secs = primary.search(q, k, mode=self.mode)
+            lat = primary.live.last_latencies
+            preds[rows] = ids
+            lat_all.append(lat)
+            search_s += secs
+            self.monitor.observe_query(lat)
+            recall = float(recall_at_k_masked(ids[:, :k], gt[rows, :k]))
+            self.monitor.observe_recall(recall)
+            recall_probe.observe(recall)
+            self.monitor.observe_mem(primary.live.memory_gib())
+            if canary is not None:
+                m = int(math.ceil(p.traffic_mirror * rows.size))
+                s_ids, _ = canary.shadow.search(q[:m], k, mode=self.mode)
+                canary.primary_lat.extend(lat[:m].tolist())
+                canary.shadow_lat.extend(canary.shadow.live.last_latencies.tolist())
+                canary.primary_recall.append(
+                    float(recall_at_k_masked(ids[:m, :k], gt[rows[:m], :k]))
+                )
+                canary.shadow_recall.append(
+                    float(recall_at_k_masked(s_ids[:, :k], gt[rows[:m], :k]))
+                )
+                canary.mirrored += m
+                if canary.mirrored >= p.canary_queries:
+                    t = float(trace.times[min(op_i, trace.n_ops - 1)])
+                    decide(canary, op_i, t)
+
+        def control_tick(op_i: int, t: float) -> None:
+            nonlocal last_tick_op, last_tick_time, violation_time, canary
+            nonlocal recall_floor_time, breached_now, recall_breached_now
+            # integrate violation time over the elapsed interval first: the
+            # state observed at the previous tick held for [last_tick, now)
+            dt = max(t - last_tick_time, 0.0)
+            if breached_now:
+                violation_time += dt
+            if recall_breached_now:
+                recall_floor_time += dt
+            status = self.monitor.evaluate(at_time=t)
+            breached_now = not status.ok
+            recall_breached_now = "recall_floor" in status.breaches
+            if not status.ok:
+                self.ledger.counter("vdms_slo_breach_total").inc()
+                self._event(
+                    "breach", op_i, t, breaches=list(status.breaches),
+                    p99=status.p99_latency_s, recall=status.recall,
+                )
+            drift_fired = False
+            if self.detector is not None and status.n_latency_samples > 0:
+                probe = {
+                    "speed": status.n_latency_samples
+                    / max(float(np.sum(self.monitor._lat)), 1e-12),
+                    "recall": status.recall,
+                }
+                if self.session is not None:
+                    drift_fired = self.session.probe_drift(
+                        self.detector, config, raw=probe
+                    )
+                else:
+                    drift_fired = self.detector.observe(probe)
+                if drift_fired:
+                    self._event("drift", op_i, t)
+            stats = primary.live.stats()
+            adj = dict(stats)
+            adj["n_seals"] = stats["n_seals"] + self._life_off["n_seals"]
+            adj["n_compactions"] = (
+                stats["n_compactions"] + self._life_off["n_compactions"]
+            )
+            observe_stats(self.ledger, adj)
+            last_tick_op, last_tick_time = op_i, t
+            if not guard or canary is not None or op_i < cooldown_until:
+                return
+            if status.ok and not drift_fired:
+                return
+            canary = self._start_canary(trace, config, primary, op_i, t)
+
+        # --- replay -------------------------------------------------------
+        for i in range(trace.n_ops):
+            kind = int(trace.kinds[i])
+            t = float(trace.times[i])
+            if kind == OP_SEARCH:
+                pending.append(int(trace.payload[i]))
+            else:
+                flush(i)
+                row = int(trace.payload[i])
+                if kind == OP_INSERT:
+                    # the j-th insert op creates global id n_base + j, and
+                    # insert payloads are assigned sequentially: gid follows
+                    gid = trace.n_base + row
+                    primary.insert(gid, trace.inserts[row])
+                    if canary is not None:
+                        canary.shadow.insert(gid, trace.inserts[row])
+                else:
+                    primary.delete(row)
+                    if canary is not None:
+                        canary.shadow.delete(row)
+            if i - last_tick_op >= p.check_every:
+                flush(i)
+                control_tick(i, t)
+        flush(trace.n_ops - 1)
+        t_end = float(trace.times[-1]) if trace.n_ops else 1.0
+        control_tick(trace.n_ops - 1, t_end)
+        if canary is not None:
+            # the trace ended mid-canary: decide on whatever mirrored traffic
+            # accumulated, or abort back to the incumbent (checkpoint-exact)
+            if canary.mirrored > 0:
+                decide(canary, trace.n_ops - 1, t_end)
+            else:
+                self._restore(canary.snapshot)
+                self.n_rollbacks += 1
+                self.ledger.counter("vdms_rollback_total").inc()
+                self._event("canary_aborted", trace.n_ops - 1, t_end)
+                canary = None
+
+        # --- report -------------------------------------------------------
+        lats = np.concatenate(lat_all) if lat_all else np.empty(0, np.float64)
+        p50, p99 = (
+            np.percentile(lats, (50.0, 99.0)) if lats.size else (0.0, 0.0)
+        )
+        overall_recall = float(
+            recall_at_k_masked(preds[:, :k], gt[:, :k]) if trace.n_searches else 0.0
+        )
+        return {
+            "guard": bool(guard),
+            "trace": trace.name,
+            "n_ops": int(trace.n_ops),
+            "n_searches": int(trace.n_searches),
+            "recall": overall_recall,
+            "search_s": float(search_s),
+            "speed": float(trace.n_searches / max(search_s, 1e-9)),
+            "lat_p50_s": float(p50),
+            "lat_p99_s": float(p99),
+            "slo": self.slo.to_dict(),
+            "violation_time": float(violation_time),
+            "violation_minutes": float(violation_time * self.trace_minutes),
+            "recall_under_floor_time": float(recall_floor_time),
+            "recall_under_floor_minutes": float(recall_floor_time * self.trace_minutes),
+            "n_breach_events": len(self.monitor.events),
+            "n_retunes": int(self.n_retunes),
+            "n_promotes": int(self.n_promotes),
+            "n_rollbacks": int(self.n_rollbacks),
+            "config_history": config_history,
+            "timeline": copy.deepcopy(self.timeline),
+            "final_stats": primary.live.stats(),
+        }
+
+    # ------------------------------------------------------------------
+    # retune + canary start
+    # ------------------------------------------------------------------
+    def _start_canary(
+        self,
+        trace: WorkloadTrace,
+        config: Dict[str, Any],
+        primary: GidMappedVDMS,
+        op_i: int,
+        t: float,
+    ) -> Optional[_Canary]:
+        """Retune on the trailing trace window; on a genuinely new candidate,
+        build it as a shadow instance and open the canary. Returns None when
+        the window is too thin or the tuner retains the incumbent."""
+        p = self.params
+        lo = max(0, op_i - p.retune_window_ops)
+        window = trace.window(lo, op_i)
+        if window.n_searches < p.min_window_searches:
+            self._event("retune_skipped", op_i, t, reason="window has too few searches")
+            return None
+        snap = self._snapshot()
+        env = VDMSTuningEnv(
+            trace=window,
+            workload="streaming",
+            mode=self.mode,
+            seed=self.seed,
+            n_phases=1,
+            compact_threshold=self.compact_threshold,
+        )
+        self.session.backend = env
+        anchors = (
+            self._repair_anchors(config) if p.repair_anchors else [dict(config)]
+        )
+        self.session.retune(p.retune_iters, reanchor=anchors)
+        self.n_retunes += 1
+        self.ledger.counter("vdms_retune_total").inc()
+        # window replays bootstrap the visible state as fully-indexed sealed
+        # segments, which flatters recall vs the live sliding window — demand
+        # a margin above the floor before a candidate is considered feasible
+        rlim = self.slo.recall_floor
+        if rlim is not None:
+            rlim = min(1.0, rlim + p.floor_margin)
+        candidate = self.session.tuner.best_config(rlim=rlim)
+        if candidate is None or self._canon(candidate) == self._canon(config):
+            # the incumbent is still the best the tuner can find: no canary,
+            # but the freshly-learned surrogate state is kept
+            self._event("retune_retained", op_i, t)
+            return None
+        shadow = self._build_shadow(trace, candidate, primary)
+        self._event(
+            "canary_start", op_i, t, candidate=dict(candidate),
+            shadow_build_model_s=float(shadow.live.bootstrap_build_model_s),
+        )
+        self.ledger.counter("vdms_shadow_build_seconds_total").inc(
+            float(shadow.live.bootstrap_build_model_s)
+        )
+        c = _Canary(shadow, snap, op_i)
+        c.primary_seal0 = primary.live.seal_build_model_s
+        c.shadow_seal0 = shadow.live.seal_build_model_s
+        return c
+
+    def _repair_anchors(self, config: Dict[str, Any]) -> List[Dict[str, Any]]:
+        """The incumbent plus breach-repair variants, re-measured first under
+        the current window (they flow through ``retune``'s reanchor path).
+
+        The variants are a DBA's playbook for recall breaches, not a search:
+        open the bounded-consistency window fully (``graceful_time`` at its
+        minimum — drifted queries hit the newest, unindexed inserts hardest)
+        and widen the per-segment merge. BO still explores beyond them.
+        """
+        anchors = [dict(config)]
+        space = getattr(self.session.tuner, "space", None)
+        if space is None:
+            return anchors
+        by_name = {q.name: q for q in space.system_params}
+
+        def bound(q, hi: bool = False):
+            if q.kind in ("grid", "cat"):
+                return q.choices[-1] if hi else q.choices[0]
+            return q.high if hi else q.low
+
+        g = by_name.get("graceful_time")
+        if g is not None and "graceful_time" in config:
+            full_vis = dict(config, graceful_time=bound(g))
+            anchors.append(full_vis)
+            w = by_name.get("topk_merge_width")
+            if w is not None and "topk_merge_width" in config:
+                anchors.append(dict(full_vis, topk_merge_width=bound(w, hi=True)))
+        seen = set()
+        out = []
+        for a in anchors:
+            key = self._canon(a)
+            if key not in seen:
+                seen.add(key)
+                out.append(a)
+        return out
+
+    def _build_shadow(
+        self, trace: WorkloadTrace, candidate: Dict[str, Any], primary: GidMappedVDMS
+    ) -> GidMappedVDMS:
+        vis = primary.visible_gids()
+        shadow = GidMappedVDMS(
+            candidate, trace.dim, trace.capacity,
+            seed=self.seed + 1 + self.n_retunes,
+            compact_threshold=self.compact_threshold,
+        )
+        shadow.bootstrap(trace.all_vectors()[vis], vis)
+        return shadow
+
+    @staticmethod
+    def _canon(cfg: Dict[str, Any]) -> Tuple:
+        return tuple(
+            (k, round(v, 6) if isinstance(v, float) else v)
+            for k, v in sorted(cfg.items())
+        )

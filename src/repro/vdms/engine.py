@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import time
 from functools import partial
-from typing import Any, Dict, List, Tuple
+from typing import Any, Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -451,13 +451,21 @@ class LiveVDMS:
         self._frozen: Dict[str, np.ndarray] | None = None
         # lifecycle diagnostics
         self.build_time = 0.0  # bootstrap (bulk-load) build seconds
+        self.bootstrap_build_model_s = 0.0  # bootstrap builds, analytic model
         self.seal_build_s = 0.0  # incremental seal + compaction builds (wall)
         self.seal_build_model_s = 0.0  # same, under the analytic build model
         self.n_seals = 0
         self.n_compactions = 0
+        self.n_deletes = 0
         self.seal_history: List[int] = []  # n_sealed after every lifecycle event
         self._warmed: set = set()  # compiled (n_sealed, bucket, b, topk) shapes
         self.compile_s = 0.0  # wall-mode warmup (compile) seconds, kept apart
+        # search instrumentation: per-query latencies of the last search call
+        # (a query is charged its chunk's elapsed / chunk width) plus hooks
+        # ``fn(n_queries, latencies, elapsed)`` the metrics ledger attaches to
+        self.queries_served = 0
+        self.last_latencies: np.ndarray = np.empty(0, np.float64)
+        self.search_hooks: List[Callable[[int, np.ndarray, float], None]] = []
 
     # --- state views ---------------------------------------------------
     @property
@@ -478,6 +486,32 @@ class LiveVDMS:
             b += self.bundle.memory_bytes()
         return b / (1024.0**3)
 
+    def stats(self) -> Dict[str, float]:
+        """One structured snapshot of the instance's lifecycle state — the
+        dict the serving metrics ledger (and ``bench_streaming``) consumes
+        instead of poking at scattered attributes. All values are plain
+        Python ints/floats (JSON-safe)."""
+        n_total = int(self.n_total)
+        n_alive = self.n_alive
+        return {
+            "n_total": n_total,
+            "n_alive": n_alive,
+            "tombstone_fraction": float((n_total - n_alive) / max(n_total, 1)),
+            "n_sealed": int(self.n_sealed),
+            "tail_size": len(self.tail),
+            "visible_tail": int(self._visible_tail().size),
+            "n_seals": int(self.n_seals),
+            "n_compactions": int(self.n_compactions),
+            "n_deletes": int(self.n_deletes),
+            "seal_build_s": float(self.seal_build_s),
+            "seal_build_model_s": float(self.seal_build_model_s),
+            "bootstrap_build_model_s": float(self.bootstrap_build_model_s),
+            "build_time": float(self.build_time),
+            "compile_s": float(self.compile_s),
+            "mem_gib": float(self.memory_gib()),
+            "queries_served": int(self.queries_served),
+        }
+
     # --- ingestion -----------------------------------------------------
     def bootstrap(self, base: np.ndarray) -> None:
         """Bulk-load the pre-replay corpus (sealing as segments fill); the
@@ -486,6 +520,7 @@ class LiveVDMS:
         t0 = time.perf_counter()
         self.insert(base)
         self.build_time += time.perf_counter() - t0
+        self.bootstrap_build_model_s += self.seal_build_model_s
         self.seal_build_s = 0.0
         self.seal_build_model_s = 0.0
 
@@ -547,6 +582,7 @@ class LiveVDMS:
         if gid < 0 or gid >= self.n_total or not self.alive[gid]:
             return False
         self.alive[gid] = False
+        self.n_deletes += 1
         z = int(self.gid_seg[gid])
         if z >= 0:
             row = self.seg_gids[z]
@@ -632,7 +668,7 @@ class LiveVDMS:
             self.n_sealed if self.bundle is not None else -1, nb, b, topk, use_fused
         )
         out = np.empty((n_chunks * b, topk), np.int32)
-        elapsed = 0.0
+        chunk_s = np.zeros(n_chunks, np.float64)
         for c in range(n_chunks):
             lo = c * b
             chunk = queries[lo : lo + b]
@@ -647,22 +683,30 @@ class LiveVDMS:
                 self._warmed.add(shape_key)
             t0 = time.perf_counter()
             ids = dispatch(chunk)
-            elapsed += time.perf_counter() - t0
+            chunk_s[c] = time.perf_counter() - t0
             out[lo : lo + b] = ids
         if mode == "analytic":
-            elapsed = (
-                analytic_chunk_seconds(
-                    self.bundle.kind if self.bundle is not None else "FLAT",
-                    self.bundle.static if self.bundle is not None else {},
-                    self.bundle.arrays if self.bundle is not None else {},
-                    self.n_sealed,
-                    self.seg_size,
-                    int(vis.size),
-                    self.dim,
-                    b,
-                )
-                * n_chunks
+            chunk_s[:] = analytic_chunk_seconds(
+                self.bundle.kind if self.bundle is not None else "FLAT",
+                self.bundle.static if self.bundle is not None else {},
+                self.bundle.arrays if self.bundle is not None else {},
+                self.n_sealed,
+                self.seg_size,
+                int(vis.size),
+                self.dim,
+                b,
             )
+        elapsed = float(chunk_s.sum())
+        # per-query wall latency: each chunk's elapsed is split over the real
+        # queries it served (the final chunk's padding burden falls on them),
+        # so latencies always sum to the batch elapsed — this is what makes
+        # serving percentiles and throughput accounting consistent
+        counts = np.minimum(b, nq - b * np.arange(n_chunks))
+        lat = np.repeat(chunk_s / np.maximum(counts, 1), counts)
+        self.last_latencies = lat
+        self.queries_served += nq
+        for hook in self.search_hooks:
+            hook(nq, lat, elapsed)
         return out[:nq], elapsed
 
 

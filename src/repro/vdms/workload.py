@@ -16,7 +16,7 @@ timestamp, computed by :func:`time_aware_ground_truth`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -300,6 +300,7 @@ def replay_trace(
     ground_truth: Optional[np.ndarray] = None,
     compact_threshold: float = 0.3,
     with_live: bool = False,
+    search_hooks: Sequence[Callable] = (),
 ):
     """Replay a trace under one configuration and measure the paper's
     objectives in the streaming regime.
@@ -307,17 +308,23 @@ def replay_trace(
     Returns a flat float dict (an ``EvalBackend`` raw result): ``speed`` is
     search throughput (consecutive searches are micro-batched, insert/delete
     barriers respected), ``recall`` is time-aware recall@k against
-    :func:`time_aware_ground_truth`, ``mem_gib`` is the peak footprint, and
-    the ingest side reports ``seal_build_s`` (incremental seal + compaction
-    builds), ``n_seals`` and ``n_compactions``. With ``with_live=True`` also
-    returns the finished :class:`LiveVDMS` (diagnostics: seal history,
-    visible ids) as a second value.
+    :func:`time_aware_ground_truth`, ``mem_gib`` is the peak footprint,
+    ``lat_p50_s``/``lat_p95_s``/``lat_p99_s`` are per-query wall-latency
+    percentiles over the whole replay, and the ingest side reports
+    ``seal_build_s`` (incremental seal + compaction builds), ``n_seals`` and
+    ``n_compactions``. ``search_hooks`` are attached to the live instance's
+    per-search instrumentation (``fn(n_queries, latencies, elapsed)`` — the
+    serving metrics ledger's feed). With ``with_live=True`` also returns the
+    finished :class:`LiveVDMS` (diagnostics: seal history, visible ids) as a
+    second value.
     """
     k = topk or trace.k
     gt = ground_truth if ground_truth is not None else time_aware_ground_truth(trace, k)
     live = LiveVDMS(config, trace.dim, trace.capacity, seed=seed, compact_threshold=compact_threshold)
+    live.search_hooks.extend(search_hooks)
     live.bootstrap(trace.base)
     preds = -np.ones((trace.n_searches, k), np.int32)
+    lat_all: List[np.ndarray] = []
     search_s = 0.0
     peak_mem = live.memory_gib()
     pending: List[int] = []
@@ -329,6 +336,7 @@ def replay_trace(
         rows = np.asarray(pending, np.int64)
         ids, secs = live.search(trace.queries[rows], k, mode=mode)
         preds[rows] = ids
+        lat_all.append(live.last_latencies)
         search_s += secs
         pending.clear()
 
@@ -347,19 +355,28 @@ def replay_trace(
     peak_mem = max(peak_mem, live.memory_gib())
 
     n_searches = trace.n_searches
+    stats = live.stats()
+    lats = np.concatenate(lat_all) if lat_all else np.empty(0, np.float64)
+    p50, p95, p99 = (
+        np.percentile(lats, (50.0, 95.0, 99.0)) if lats.size else (0.0, 0.0, 0.0)
+    )
     # analytic mode charges the deterministic build model for ingest overhead
     # (wall-clock build noise would leak into the tuning objective otherwise)
-    seal_build = live.seal_build_model_s if mode == "analytic" else live.seal_build_s
+    seal_build = stats["seal_build_model_s"] if mode == "analytic" else stats["seal_build_s"]
     result = {
         "speed": float(n_searches / max(search_s, 1e-9)),
         "recall": float(recall_at_k_masked(preds[:, : trace.k], gt[:, : trace.k])),
         "mem_gib": float(peak_mem),
-        "build_time": float(live.build_time),
-        "compile_time": float(live.compile_s),
+        "build_time": float(stats["build_time"]),
+        "compile_time": float(stats["compile_s"]),
         "seal_build_s": float(seal_build),
         "search_s": float(search_s),
         "n_searches": float(n_searches),
-        "n_seals": float(live.n_seals),
-        "n_compactions": float(live.n_compactions),
+        "n_seals": float(stats["n_seals"]),
+        "n_compactions": float(stats["n_compactions"]),
+        "tombstone_fraction": float(stats["tombstone_fraction"]),
+        "lat_p50_s": float(p50),
+        "lat_p95_s": float(p95),
+        "lat_p99_s": float(p99),
     }
     return (result, live) if with_live else result

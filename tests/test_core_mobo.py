@@ -228,6 +228,25 @@ def test_space_encode_decode_roundtrip(seed):
             assert back[k] == v
 
 
+def test_grid_encode_snaps_off_grid_numeric_to_nearest_choice():
+    # a hand-tuned serving config (e.g. segment_max_size=256 when the grid
+    # starts at 1024) must still be embeddable when it is re-anchored into
+    # a retune history — encode snaps to the nearest numeric choice
+    p = Param("ka", "grid", choices=(1, 2, 4, 8), default=2)
+    assert p.encode(3) == p.encode(2)  # ties break toward the earlier choice
+    assert p.encode(100) == p.encode(8)
+    assert p.encode(0) == p.encode(1)
+    space = _toy_space()
+    cfg = space.default_config("A")
+    x_off = space.encode(dict(cfg, ka=5))
+    assert np.array_equal(x_off, space.encode(dict(cfg, ka=4)))
+    # non-numeric mismatches still refuse loudly
+    with pytest.raises(ValueError):
+        Param("s2", "cat", choices=(False, True), default=False).encode("yes")
+    with pytest.raises(ValueError):
+        Param("kc", "cat", choices=("a", "b"), default="a").encode(1)
+
+
 def test_space_free_mask_owns_right_dims():
     space = _toy_space()
     ma, mb = space.free_mask("A"), space.free_mask("B")

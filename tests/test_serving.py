@@ -1,0 +1,320 @@
+"""Serving control plane: metrics ledger, SLO guardrails, shadow/canary loop."""
+import copy
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import TuningSession, VDTuner, promotion_score
+from repro.serving import (
+    ControllerParams,
+    GidMappedVDMS,
+    Histogram,
+    MetricsLedger,
+    ServingController,
+    SLOMonitor,
+    SLOSpec,
+    attach_live,
+    observe_stats,
+    serving_ledger,
+)
+from repro.vdms import LiveVDMS, VDMSTuningEnv, make_space, make_trace
+from repro.vdms.workload import time_aware_ground_truth
+
+LIVE_CFG = dict(
+    index_type="IVF_FLAT",
+    nlist=16,
+    nprobe=16,
+    segment_max_size=256,
+    seal_proportion=0.5,
+    graceful_time=0.0,
+    search_batch_size=8,
+    topk_merge_width=64,
+    kmeans_iters=4,
+    storage_bf16=False,
+)
+
+
+def _vectors(n, dim=16, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, dim)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# metrics ledger
+# ---------------------------------------------------------------------------
+def test_counter_monotone_and_gauge_free():
+    led = MetricsLedger()
+    c = led.counter("x_total")
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = led.gauge("x_now")
+    g.set(4.0)
+    g.inc(-1.0)
+    assert g.value == 3.0
+
+
+def test_histogram_buckets_percentiles_and_exposition():
+    h = Histogram("lat_seconds", "latency", buckets=(0.01, 0.1, 1.0), window=100)
+    h.observe_many([0.005, 0.05, 0.5, 5.0])
+    assert h.count == 4 and h.bucket_counts == [1, 1, 1, 1]
+    assert h.percentile(0.0) == 0.005 and h.percentile(100.0) == 5.0
+    text = "\n".join(h.exposition())
+    assert "# TYPE lat_seconds histogram" in text
+    # bucket lines are cumulative, +Inf last equals the total count
+    assert 'lat_seconds_bucket{le="0.1"} 2' in text
+    assert 'lat_seconds_bucket{le="+Inf"} 4' in text
+    assert "lat_seconds_count 4" in text
+    with pytest.raises(ValueError):
+        Histogram("bad", buckets=(1.0, 0.5))
+
+
+def test_ledger_get_or_create_and_kind_mismatch():
+    led = MetricsLedger()
+    assert led.counter("a_total") is led.counter("a_total")
+    with pytest.raises(ValueError):
+        led.gauge("a_total")
+    assert "a_total" in led and led.names() == ["a_total"]
+
+
+def test_ledger_json_is_strict_and_text_scrapes(tmp_path):
+    led = serving_ledger()
+    led.histogram("vdms_query_latency_seconds").observe(float("inf"))
+    led.counter("vdms_queries_total").inc(3)
+    path = tmp_path / "ledger.json"
+    led.dump_json(str(path))
+    dumped = json.loads(path.read_text())  # strict JSON must parse
+    assert dumped["vdms_queries_total"]["value"] == 3.0
+    text = led.to_text()
+    assert "# TYPE vdms_queries_total counter" in text
+    assert "vdms_rollback_total 0" in text
+
+
+def test_attach_live_feeds_ledger_and_observe_stats_syncs():
+    led = serving_ledger()
+    live = LiveVDMS(LIVE_CFG, dim=16, capacity=1024)
+    attach_live(led, live)
+    live.bootstrap(_vectors(300))
+    live.search(_vectors(10, seed=1), topk=5)
+    assert led.counter("vdms_queries_total").value == 10
+    assert led.histogram("vdms_query_latency_seconds").count == 10
+    assert led.gauge("vdms_qps").value > 0
+    observe_stats(led, live.stats())
+    assert led.counter("vdms_seals_total").value == 2
+    assert led.gauge("vdms_sealed_segments").value == 2
+    observe_stats(led, live.stats())  # idempotent re-sync
+    assert led.counter("vdms_seals_total").value == 2
+    assert led.gauge("vdms_mem_gib").value > 0
+
+
+# ---------------------------------------------------------------------------
+# SLO guardrails
+# ---------------------------------------------------------------------------
+def test_slo_spec_validation_and_objective_mapping():
+    with pytest.raises(ValueError):
+        SLOSpec()  # every guardrail disabled
+    with pytest.raises(ValueError):
+        SLOSpec(recall_floor=1.5)
+    with pytest.raises(ValueError):
+        SLOSpec(p99_latency_s=-1.0)
+    spec = SLOSpec(recall_floor=0.9)
+    obj = spec.objective_spec(alpha=0.5)
+    assert obj.rlim == 0.9 and obj.names == ("sustained_qps", "recall")
+
+
+def test_slo_monitor_latency_guardrail_arms_after_min_samples():
+    spec = SLOSpec(p99_latency_s=0.01, min_samples=8, latency_window=32)
+    mon = SLOMonitor(spec)
+    mon.observe_query([0.5] * 4)  # hot, but below min_samples
+    assert mon.evaluate().ok
+    mon.observe_query([0.5] * 8)
+    status = mon.evaluate(at_time=0.25)
+    assert not status.ok and status.breaches == ("p99_latency",)
+    assert status.at_time == 0.25 and len(mon.events) == 1
+    mon.reset()
+    assert mon.evaluate().ok  # cold window never breaches
+
+
+def test_slo_monitor_recall_and_mem_guardrails():
+    spec = SLOSpec(recall_floor=0.9, mem_gib_cap=1.0)
+    mon = SLOMonitor(spec)
+    assert mon.evaluate().ok  # no probes yet: recall guardrail unarmed
+    mon.observe_recall(0.85)
+    mon.observe_mem(2.0)
+    status = mon.evaluate()
+    assert set(status.breaches) == {"recall_floor", "mem_cap"}
+    mon.observe_recall(0.99)  # window mean recovers
+    mon.observe_recall(0.99)
+    mon.observe_mem(0.5)
+    assert "mem_cap" not in mon.evaluate().breaches
+
+
+def test_promotion_score_is_lexicographic_on_feasibility():
+    feas = {"speed": 100.0, "recall": 0.95, "n_searches": 10.0, "search_s": 0.1, "seal_build_s": 0.0}
+    fast_infeas = {"speed": 900.0, "recall": 0.5, "n_searches": 10.0, "search_s": 0.01, "seal_build_s": 0.0}
+    assert promotion_score(feas, rlim=0.9) > promotion_score(fast_infeas, rlim=0.9)
+    # among feasible configs sustained QPS decides
+    faster = dict(feas, search_s=0.05)
+    assert promotion_score(faster, rlim=0.9) > promotion_score(feas, rlim=0.9)
+    # among infeasible configs the higher recall is the least-bad candidate
+    less_bad = dict(fast_infeas, recall=0.7)
+    assert promotion_score(less_bad, rlim=0.9) > promotion_score(fast_infeas, rlim=0.9)
+    # without a floor everything is feasible
+    assert promotion_score(fast_infeas)[0] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# gid-mapped instances
+# ---------------------------------------------------------------------------
+def test_gid_mapped_vdms_speaks_global_ids():
+    data = _vectors(120, seed=3)
+    gids = np.arange(1000, 1120)
+    inst = GidMappedVDMS(dict(LIVE_CFG, index_type="FLAT"), dim=16, capacity=512)
+    inst.bootstrap(data, gids)
+    assert set(inst.visible_gids().tolist()) == set(gids.tolist())
+    extra = _vectors(1, seed=4)[0]
+    inst.insert(5000, extra)
+    assert inst.delete(1003) and not inst.delete(1003)
+    assert not inst.delete(777)  # unknown global id is a no-op
+    ids, _ = inst.search(data[:8], topk=5)
+    returned = set(ids.ravel().tolist()) - {-1}
+    assert returned <= (set(gids.tolist()) | {5000}) - {1003}
+    # the nearest neighbor of a bootstrapped vector is its own global id
+    assert ids[0, 0] == 1000
+
+
+def test_gid_mapped_bootstrap_validates_lengths():
+    inst = GidMappedVDMS(LIVE_CFG, dim=16, capacity=64)
+    with pytest.raises(ValueError):
+        inst.bootstrap(_vectors(4), np.arange(5))
+
+
+# ---------------------------------------------------------------------------
+# controller
+# ---------------------------------------------------------------------------
+def _drifted_trace(n_base=800, n_ops=400, seed=0):
+    return make_trace(
+        "glove_like", n_base=n_base, n_ops=n_ops, drift="step",
+        seed=seed, mix=(0.3, 0.6, 0.1),
+    )
+
+
+def _served_session(trace, n_pre_ops=150, n_iters=6, seed=0):
+    """Tune an incumbent on the pre-drift prefix, as a deployment would."""
+    env = VDMSTuningEnv(
+        trace=trace.window(0, n_pre_ops), workload="streaming",
+        mode="analytic", seed=seed, n_phases=1,
+    )
+    tuner = VDTuner(make_space(), env, seed=seed, warm_start=True)
+    session = TuningSession(tuner)
+    session.run(n_iters)
+    return session, env
+
+
+def test_unguarded_serve_reports_and_is_deterministic():
+    trace = _drifted_trace(n_base=400, n_ops=200)
+    slo = SLOSpec(recall_floor=0.99, min_samples=8)
+    cfg = dict(LIVE_CFG, index_type="FLAT", graceful_time=0.4)
+    reports = []
+    for _ in range(2):
+        ctrl = ServingController(slo, params=ControllerParams(check_every=24), seed=0)
+        reports.append(ctrl.serve(trace, cfg, guard=False))
+    a, b = reports
+    assert a["violation_minutes"] == b["violation_minutes"]
+    assert a["recall"] == b["recall"] and a["n_retunes"] == 0
+    assert a["n_breach_events"] > 0  # the scenario genuinely breaches
+    assert a["violation_time"] * 60.0 == pytest.approx(a["violation_minutes"])
+    assert a["config_history"] == [{"op": 0, "time": 0.0, "config": cfg}]
+    assert a["final_stats"]["queries_served"] == a["n_searches"]
+
+
+def test_guarded_serve_requires_session():
+    slo = SLOSpec(recall_floor=0.9)
+    with pytest.raises(ValueError):
+        ServingController(slo).serve(_drifted_trace(400, 50), LIVE_CFG, guard=True)
+
+
+def test_losing_canary_rolls_back_bit_identical():
+    trace = _drifted_trace(n_base=400, n_ops=260, seed=2)
+    session, _ = _served_session(trace, n_pre_ops=100, n_iters=4, seed=2)
+    cfg = dict(LIVE_CFG, index_type="FLAT", graceful_time=0.4)
+    # unreachable floor + no repair anchors: every retune's knee fallback is
+    # an approximate-index candidate that loses the canary on live traffic
+    slo = SLOSpec(recall_floor=0.999, min_samples=8)
+    ctrl = ServingController(
+        slo, session=session,
+        params=ControllerParams(
+            check_every=24, canary_queries=16, retune_iters=4,
+            retune_window_ops=128, cooldown_ops=48, min_window_searches=8,
+            repair_anchors=False, floor_margin=0.0,
+        ),
+        seed=2,
+    )
+    state_before = copy.deepcopy(session.state_dict())
+    backend_before = session.backend
+    report = ctrl.serve(trace, cfg, guard=True)
+    assert report["n_retunes"] > 0
+    assert report["n_promotes"] == 0
+    assert report["n_rollbacks"] == report["n_retunes"]
+    # checkpoint-exact: the losing canaries left no trace in the session
+    assert session.state_dict() == state_before
+    assert session.backend is backend_before
+    assert [e["event"] for e in report["timeline"] if e["event"] == "rollback"]
+
+
+def test_breach_triggers_canary_and_promotion_repairs_recall():
+    # step drift moves queries toward the drifted inserts AND turns the mix
+    # insert-heavy, so the incumbent's wide bounded-consistency window
+    # (graceful_time=0.4 hides the newest tail) starts losing exactly the
+    # vectors the drifted queries need: a recall breach the repair-anchor
+    # retune fixes by opening the window (graceful_time -> 0)
+    trace = make_trace(
+        "glove_like", n_base=800, n_ops=640, drift="step", seed=0,
+        mix=(0.2, 0.75, 0.05), mix_to=(0.65, 0.3, 0.05),
+    )
+    cfg = dict(
+        make_space().default_config("FLAT"), segment_max_size=256, graceful_time=0.4
+    )
+    session, _ = _served_session(trace)
+    slo = SLOSpec(recall_floor=0.9, min_samples=16)
+    ctrl = ServingController(
+        slo, session=session,
+        params=ControllerParams(
+            retune_iters=6, check_every=24, canary_queries=24,
+            retune_window_ops=112, cooldown_ops=48, floor_margin=0.02,
+        ),
+        seed=0,
+    )
+    guarded = ctrl.serve(trace, cfg, guard=True)
+    baseline = ServingController(
+        slo, params=ControllerParams(check_every=24), seed=0
+    ).serve(trace, cfg, guard=False)
+    assert guarded["n_promotes"] >= 1
+    events = [e["event"] for e in guarded["timeline"]]
+    assert "breach" in events and "canary_start" in events and "promote" in events
+    # the promoted config took over serving
+    assert len(guarded["config_history"]) == 1 + guarded["n_promotes"]
+    # and the guardrails did their job vs the frozen baseline
+    assert guarded["violation_minutes"] < baseline["violation_minutes"]
+    assert guarded["recall"] > baseline["recall"]
+    # ledger counters agree with the report
+    led = ctrl.ledger
+    assert led.counter("vdms_promote_total").value == guarded["n_promotes"]
+    assert led.counter("vdms_retune_total").value == guarded["n_retunes"]
+    assert led.counter("vdms_slo_breach_total").value == guarded["n_breach_events"]
+    assert led.histogram("vdms_query_latency_seconds").count > 0
+    json.dumps(led.to_json())  # the CI artifact serializes strictly
+
+
+def test_serve_with_precomputed_ground_truth_matches():
+    trace = _drifted_trace(n_base=400, n_ops=150)
+    gt = time_aware_ground_truth(trace, trace.k)
+    slo = SLOSpec(recall_floor=0.5, min_samples=8)
+    cfg = dict(LIVE_CFG, index_type="FLAT")
+    a = ServingController(slo, seed=0).serve(trace, cfg, guard=False)
+    b = ServingController(slo, seed=0).serve(trace, cfg, ground_truth=gt, guard=False)
+    assert a["recall"] == b["recall"] and a["lat_p99_s"] == b["lat_p99_s"]

@@ -20,6 +20,7 @@ from repro.vdms import (
     make_dataset,
     make_space,
     make_trace,
+    replay_trace,
 )
 
 LIVE_CFG = dict(
@@ -291,3 +292,93 @@ def test_streaming_objective_charges_ingest_overhead():
     assert qps0 == pytest.approx(1000.0)
     static_raw = {"speed": 1234.0, "recall": 0.8}
     assert streaming_sustained()(static_raw) == (1234.0, 0.8)
+
+
+# ---------------------------------------------------------------------------
+# drift detector edge cases (serving control plane probes)
+# ---------------------------------------------------------------------------
+def test_drift_detector_roundtrip_mid_warmup():
+    det = DriftDetector(rel_threshold=0.25, warmup=3)
+    det.observe({"speed": 10.0, "recall": 0.5})
+    det.observe({"speed": 14.0, "recall": 0.5})
+    assert det.reference is None  # still warming up
+    state = json.loads(json.dumps(det.state_dict()))
+    det2 = DriftDetector().load_state_dict(state)
+    assert det2.reference is None and len(det2._ref_buf) == 2
+    det2.observe({"speed": 12.0, "recall": 0.5})
+    assert det2.reference == {"speed": 12.0, "recall": 0.5}
+
+
+def test_drift_detector_threshold_boundary_is_strict():
+    det = DriftDetector(metrics=("speed",), rel_threshold=0.25, warmup=1)
+    det.observe({"speed": 1.0})
+    # rel == threshold exactly must NOT fire (strict >)
+    assert not det.observe({"speed": 1.25})
+    assert det.n_fired == 0
+    assert det.observe({"speed": 1.2500001})
+    assert det.n_fired == 1
+
+
+def test_drift_detector_resume_then_probe_bit_identical():
+    probes = [
+        {"speed": 10.0, "recall": 0.9},
+        {"speed": 11.0, "recall": 0.9},
+        {"speed": 14.0, "recall": 0.8},
+        {"speed": 7.0, "recall": 0.6},
+    ]
+    a = DriftDetector(rel_threshold=0.2, warmup=2)
+    for p in probes:
+        a.observe(p)
+    b = DriftDetector(rel_threshold=0.2, warmup=2)
+    for p in probes[:2]:
+        b.observe(p)
+    b = DriftDetector().load_state_dict(json.loads(json.dumps(b.state_dict())))
+    for p in probes[2:]:
+        b.observe(p)
+    assert b.log == a.log and b.n_fired == a.n_fired and b.reference == a.reference
+
+
+# ---------------------------------------------------------------------------
+# per-query latency instrumentation + lifecycle stats
+# ---------------------------------------------------------------------------
+def test_live_search_records_per_query_latencies():
+    live = LiveVDMS(LIVE_CFG, dim=16, capacity=1024)
+    live.bootstrap(_vectors(300))
+    seen = []
+    live.search_hooks.append(lambda nq, lat, elapsed: seen.append((nq, lat.copy(), elapsed)))
+    _, elapsed = live.search(_vectors(20, seed=7), topk=5)
+    assert live.queries_served == 20
+    assert live.last_latencies.shape == (20,)
+    # per-query latencies partition the batch elapsed time
+    assert float(live.last_latencies.sum()) == pytest.approx(elapsed, rel=1e-6)
+    (nq, lat, el), = seen
+    assert nq == 20 and el == elapsed
+    np.testing.assert_array_equal(lat, live.last_latencies)
+
+
+def test_live_stats_snapshot_is_structured_and_json_safe():
+    live = LiveVDMS(LIVE_CFG, dim=16, capacity=1024)
+    live.bootstrap(_vectors(300))
+    live.insert(_vectors(10, seed=3))
+    live.delete(0)
+    live.search(_vectors(4, seed=4), topk=5)
+    stats = live.stats()
+    assert stats["n_total"] == 310 and stats["n_alive"] == 309
+    assert stats["tombstone_fraction"] == pytest.approx(1.0 / 310.0)
+    assert stats["n_sealed"] == 2 and stats["n_deletes"] == 1
+    assert stats["queries_served"] == 4
+    assert stats["tail_size"] == 310 - 2 * 128
+    json.dumps(stats)  # plain ints/floats only
+    assert all(isinstance(v, (int, float)) for v in stats.values())
+
+
+def test_replay_trace_reports_latency_percentiles_and_hooks():
+    trace = make_trace("glove_like", n_base=400, n_ops=120, seed=3, mix=(0.3, 0.6, 0.1))
+    calls = []
+    result = replay_trace(
+        trace, LIVE_CFG, mode="analytic",
+        search_hooks=[lambda nq, lat, elapsed: calls.append(nq)],
+    )
+    assert 0.0 < result["lat_p50_s"] <= result["lat_p95_s"] <= result["lat_p99_s"]
+    assert sum(calls) == trace.n_searches
+    assert result["tombstone_fraction"] >= 0.0
