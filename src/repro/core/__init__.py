@@ -38,6 +38,7 @@ from .pareto import non_dominated_mask, pareto_front
 from .session import (
     BatchExecutor,
     DriftDetector,
+    RetryPolicy,
     SequentialExecutor,
     StopSession,
     ThreadedExecutor,
@@ -50,7 +51,8 @@ from .tuner import Observation, TunerBase, TuningFailure, VDTuner
 __all__ = [
     "ALL_BASELINES", "BatchExecutor", "Config", "DefaultOnly", "DriftDetector",
     "EvalBackend", "GP", "GPParams", "OBJECTIVES", "ObjectiveSpec", "Observation",
-    "OpenTunerLike", "OtterTuneLike", "Param", "QEHVI", "RandomLHS", "SearchSpace",
+    "OpenTunerLike", "OtterTuneLike", "Param", "QEHVI", "RandomLHS", "RetryPolicy",
+    "SearchSpace",
     "SequentialBatchMixin", "SequentialExecutor", "StopSession", "SuccessiveAbandon",
     "ThreadedExecutor", "TunerBase", "TuningFailure", "TuningSession", "VDTuner",
     "as_eval_backend", "balanced_base", "cei", "cei_jax", "checkpoint_every",

@@ -29,9 +29,12 @@ then recommendation continues from the exact saved RNG state.
 from __future__ import annotations
 
 import copy
+import dataclasses
+import json
 import os
 import time
 from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 from .objectives import EvalBackend, TuningFailure
@@ -138,6 +141,69 @@ class DriftDetector:
         self.n_fired = int(state.get("n_fired", 0))
         self.log = copy.deepcopy(state.get("log", []))
         return self
+
+
+# ---------------------------------------------------------------------------
+# Transient-failure retry policy (the honest failure taxonomy's session half)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """How a session treats *transient* :class:`TuningFailure`s.
+
+    A transient failure (environment fault — lost segment, flaky build,
+    injected chaos — not the configuration's doing) is retried up to
+    ``max_retries`` times with exponential backoff before falling through to
+    the tuner's worst-value failure feedback; a retried-and-recovered
+    evaluation is told as a *normal* observation with the wasted attempts'
+    wall time charged to its build seconds, so the GP never learns from
+    faults it cannot control. ``eval_timeout_s`` bounds each evaluation's
+    wall clock (a timeout is itself a transient failure).
+    """
+
+    max_retries: int = 2
+    backoff_s: float = 0.25  # first retry delay (seconds); 0 disables sleeping
+    backoff_factor: float = 2.0
+    eval_timeout_s: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_s < 0 or self.backoff_factor < 1.0:
+            raise ValueError("need backoff_s >= 0 and backoff_factor >= 1")
+        if self.eval_timeout_s is not None and self.eval_timeout_s <= 0:
+            raise ValueError(f"eval_timeout_s must be > 0, got {self.eval_timeout_s}")
+
+    def backoff(self, attempt: int) -> float:
+        """Delay before retry number ``attempt`` (1-based)."""
+        return self.backoff_s * self.backoff_factor ** max(attempt - 1, 0)
+
+
+class _TimeoutBackend:
+    """Per-evaluation wall-clock timeout wrapper around an EvalBackend.
+
+    Deliberately does NOT expose ``evaluate_batch``: a vectorized batch
+    cannot be timed out per config, so batch executors fall back to their
+    sequential path through this proxy. On timeout the worker thread is
+    abandoned (``shutdown(wait=False)``) rather than joined — the stuck
+    evaluation keeps running to completion in the background, but the
+    session moves on with a *transient* :class:`TuningFailure`.
+    """
+
+    def __init__(self, backend: EvalBackend, timeout_s: float):
+        self._backend = backend
+        self._timeout_s = float(timeout_s)
+
+    def __call__(self, cfg: Config) -> Any:
+        ex = ThreadPoolExecutor(max_workers=1)
+        fut = ex.submit(self._backend, cfg)
+        try:
+            return fut.result(timeout=self._timeout_s)
+        except FuturesTimeout:
+            raise TuningFailure(
+                f"evaluation timed out after {self._timeout_s:.3g}s", transient=True
+            ) from None
+        finally:
+            ex.shutdown(wait=False)
 
 
 # ---------------------------------------------------------------------------
@@ -257,6 +323,11 @@ class TuningSession:
         Callables ``cb(session, observation)`` invoked after every told
         observation — checkpoint hooks, progress bars, early stopping (raise
         :class:`StopSession`).
+    retry:
+        Optional :class:`RetryPolicy`. When set, *transient* failures are
+        retried with backoff (and each evaluation is wall-clock bounded by
+        ``eval_timeout_s``) before any worst-value feedback reaches the
+        tuner. ``None`` (default) reproduces pre-policy behavior exactly.
     """
 
     def __init__(
@@ -265,6 +336,7 @@ class TuningSession:
         backend: Optional[EvalBackend] = None,
         executor: ExecutorLike = None,
         callbacks: Sequence[Callback] = (),
+        retry: Optional[RetryPolicy] = None,
     ):
         self.tuner = tuner
         self.backend = backend if backend is not None else tuner.objective
@@ -272,9 +344,14 @@ class TuningSession:
             raise ValueError("no evaluation backend: pass backend= or construct the tuner with an objective")
         self.executor = resolve_executor(executor, tuner)
         self.callbacks: List[Callback] = list(callbacks)
+        self.retry = retry
         self.rounds: List[Dict[str, Any]] = []
         self._pending: List[Config] = []
         self._pending_recommend_s = 0.0
+        # per-config transient-retry bookkeeping, keyed by canonical config
+        # JSON: {"attempts", "wasted_s", "backoff_s"} — JSON-compatible so it
+        # checkpoints (a resume mid-retry continues the backoff schedule)
+        self._retry_state: Dict[str, Dict[str, float]] = {}
 
     # ------------------------------------------------------------------
     # progress views
@@ -344,27 +421,84 @@ class TuningSession:
         not-yet-told remainder.
         """
         cfgs = list(self._pending)
-        for result, eval_s in self.executor.execute(self.backend, cfgs):
+        backend = self.backend
+        if self.retry is not None:
+            self._sleep_backoff(cfgs[0])
+            if self.retry.eval_timeout_s is not None:
+                backend = _TimeoutBackend(self.backend, self.retry.eval_timeout_s)
+        for result, eval_s in self.executor.execute(backend, cfgs):
             cfg = self._pending[0]
+            retries = 0
+            if self.retry is not None:
+                if self._note_transient(cfg, result, eval_s):
+                    # the config stays at the head of the pending queue; the
+                    # run() loop re-enters _drain, which sleeps the backoff
+                    # and re-evaluates — the tuner never hears about it
+                    return
+                retries, result, eval_s = self._charge_retries(cfg, result, eval_s)
             obs = self.tuner.tell(
                 cfg, result, recommend_time=self._pending_recommend_s, eval_time=eval_s
             )
             self._pending.pop(0)
-            self._ledger_obs(obs, eval_s)
+            self._ledger_obs(obs, eval_s, retries)
             for cb in self.callbacks:
                 cb(self, obs)
 
-    def _ledger_obs(self, obs: Observation, eval_s: float) -> None:
+    # --- transient-retry plumbing (no-ops unless a RetryPolicy is set) ---
+    @staticmethod
+    def _cfg_key(cfg: Config) -> str:
+        return json.dumps(cfg, sort_keys=True, default=repr)
+
+    def _sleep_backoff(self, cfg: Config) -> None:
+        st = self._retry_state.get(self._cfg_key(cfg))
+        if st is not None and st.get("backoff_s", 0.0) > 0.0:
+            time.sleep(st["backoff_s"])
+            st["backoff_s"] = 0.0  # consumed; re-set if the retry fails again
+
+    def _note_transient(self, cfg: Config, result: Any, eval_s: float) -> bool:
+        """Record a transient failure; True = retry (leave cfg pending)."""
+        if not (isinstance(result, TuningFailure) and getattr(result, "transient", False)):
+            return False
+        key = self._cfg_key(cfg)
+        st = self._retry_state.setdefault(
+            key, {"attempts": 0, "wasted_s": 0.0, "backoff_s": 0.0}
+        )
+        if st["attempts"] >= self.retry.max_retries:
+            return False  # budget exhausted: fall through to failure feedback
+        st["attempts"] += 1
+        st["wasted_s"] += float(eval_s)
+        st["backoff_s"] = self.retry.backoff(int(st["attempts"]))
+        return True
+
+    def _charge_retries(self, cfg: Config, result: Any, eval_s: float):
+        """Fold a config's retry history into its final result: wasted wall
+        time is charged to build seconds (the honest place — retries re-build
+        the instance), and the eval time the ledger sees includes it."""
+        st = self._retry_state.pop(self._cfg_key(cfg), None)
+        if st is None:
+            return 0, result, eval_s
+        wasted = float(st["wasted_s"])
+        eval_s = float(eval_s) + wasted
+        if isinstance(result, dict):
+            result = dict(result)
+            if "seal_build_s" in result:
+                result["seal_build_s"] = float(result["seal_build_s"]) + wasted
+            elif "build_time" in result:
+                result["build_time"] = float(result["build_time"]) + wasted
+        return int(st["attempts"]), result, eval_s
+
+    def _ledger_obs(self, obs: Observation, eval_s: float, retries: int = 0) -> None:
         if not self.rounds:  # restored mid-round: ledger continues in a fresh row
             self.rounds.append({"round": 0, "n_asked": 0, "ask_s": 0.0, "evals": []})
-        self.rounds[-1]["evals"].append(
-            {
-                "iteration": int(obs.iteration),
-                "recommend_s": float(obs.recommend_time),
-                "eval_s": float(eval_s),
-                "failed": bool(obs.failed),
-            }
-        )
+        row = {
+            "iteration": int(obs.iteration),
+            "recommend_s": float(obs.recommend_time),
+            "eval_s": float(eval_s),
+            "failed": bool(obs.failed),
+        }
+        if retries:  # only recovered-after-retry rows carry the key, so
+            row["retries"] = int(retries)  # no-retry ledgers stay byte-identical
+        self.rounds[-1]["evals"].append(row)
 
     # ------------------------------------------------------------------
     # drift tracking (moving-optimum workloads)
@@ -436,6 +570,7 @@ class TuningSession:
             self.tuner.history = []
         self._pending = []
         self._pending_recommend_s = 0.0
+        self._retry_state = {}
         abandon = getattr(self.tuner, "abandon", None)
         if abandon is not None:
             self.tuner.abandon = type(abandon)(
@@ -461,22 +596,26 @@ class TuningSession:
         ``session`` block)."""
         evals = [e for r in self.rounds for e in r["evals"]]
         recommend_s = float(sum(e["recommend_s"] for e in evals))
+        totals = {
+            "n_rounds": len(self.rounds),
+            "n_evals": len(evals),
+            "n_failures": sum(1 for e in evals if e["failed"]),
+            "ask_s": float(sum(r["ask_s"] for r in self.rounds)),
+            "recommend_s": recommend_s,
+            # per-iteration recommendation overhead — the figure
+            # bench_overhead tracks and CI gates
+            "recommend_s_per_eval": recommend_s / max(len(evals), 1),
+            "eval_s": float(sum(e["eval_s"] for e in evals)),
+        }
+        n_retries = sum(e.get("retries", 0) for e in evals)
+        if n_retries:  # key appears only on fault-affected sessions, keeping
+            totals["n_retries"] = int(n_retries)  # clean ledgers byte-identical
         return {
             "schema": LEDGER_SCHEMA,
             "tuner": self.tuner.name,
             "executor": getattr(self.executor, "name", type(self.executor).__name__),
             "rounds": copy.deepcopy(self.rounds),
-            "totals": {
-                "n_rounds": len(self.rounds),
-                "n_evals": len(evals),
-                "n_failures": sum(1 for e in evals if e["failed"]),
-                "ask_s": float(sum(r["ask_s"] for r in self.rounds)),
-                "recommend_s": recommend_s,
-                # per-iteration recommendation overhead — the figure
-                # bench_overhead tracks and CI gates
-                "recommend_s_per_eval": recommend_s / max(len(evals), 1),
-                "eval_s": float(sum(e["eval_s"] for e in evals)),
-            },
+            "totals": totals,
         }
 
     # ------------------------------------------------------------------
@@ -490,6 +629,9 @@ class TuningSession:
             "pending": [dict(c) for c in self._pending],
             "pending_recommend_s": float(self._pending_recommend_s),
             "rounds": copy.deepcopy(self.rounds),
+            # optional key (absent in older checkpoints): in-flight transient
+            # retry bookkeeping, so a resume mid-retry keeps its backoff state
+            "retry": copy.deepcopy(self._retry_state),
         }
 
     def load_state_dict(self, state: Dict[str, Any]) -> "TuningSession":
@@ -506,6 +648,7 @@ class TuningSession:
         self._pending = [dict(c) for c in state.get("pending", [])]
         self._pending_recommend_s = float(state.get("pending_recommend_s", 0.0))
         self.rounds = copy.deepcopy(state.get("rounds", []))
+        self._retry_state = copy.deepcopy(state.get("retry", {}))
         return self
 
     @classmethod
@@ -516,6 +659,7 @@ class TuningSession:
         backend: Optional[EvalBackend] = None,
         executor: ExecutorLike = None,
         callbacks: Sequence[Callback] = (),
+        retry: Optional[RetryPolicy] = None,
     ) -> "TuningSession":
         """Rebuild a session from ``state_dict()`` output.
 
@@ -525,7 +669,7 @@ class TuningSession:
         checkpoint). The continuation is bit-identical to an uninterrupted
         run for deterministic backends.
         """
-        session = cls(tuner, backend=backend, executor=executor, callbacks=callbacks)
+        session = cls(tuner, backend=backend, executor=executor, callbacks=callbacks, retry=retry)
         return session.load_state_dict(state)
 
 

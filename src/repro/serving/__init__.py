@@ -25,6 +25,8 @@ from .metrics import (
     Histogram,
     MetricsLedger,
     attach_live,
+    attach_straggler,
+    ledger_table,
     observe_stats,
     percentiles,
     serving_ledger,
@@ -45,6 +47,8 @@ __all__ = [
     "ServingController",
     "UNIT_BUCKETS",
     "attach_live",
+    "attach_straggler",
+    "ledger_table",
     "observe_stats",
     "percentiles",
     "serving_ledger",

@@ -36,8 +36,9 @@ import numpy as np
 
 from ..core.objectives import promotion_score
 from ..core.session import DriftDetector, TuningSession
-from ..vdms.datasets import recall_at_k_masked
+from ..vdms.datasets import exact_topk_masked, recall_at_k_masked
 from ..vdms.engine import LiveVDMS
+from ..vdms.faults import FaultError, FaultInjector, FaultPlan, ShadowBuildOOM
 from ..vdms.tuning_env import VDMSTuningEnv
 from ..vdms.workload import (
     OP_INSERT,
@@ -45,7 +46,13 @@ from ..vdms.workload import (
     WorkloadTrace,
     time_aware_ground_truth,
 )
-from .metrics import MetricsLedger, attach_live, observe_stats, serving_ledger
+from .metrics import (
+    MetricsLedger,
+    attach_live,
+    attach_straggler,
+    observe_stats,
+    serving_ledger,
+)
 from .slo import SLOMonitor, SLOSpec
 
 
@@ -106,6 +113,13 @@ class GidMappedVDMS:
         local = self.live.visible_ids()
         return self._gid_of[local].astype(np.int64)
 
+    def searchable_gids(self) -> np.ndarray:
+        """Trace-global ids a search can return *right now* — excludes
+        quarantined segments and the graceful-window-hidden tail. This is the
+        visible set honest degraded-mode recall is scored against."""
+        local = self.live.searchable_ids()
+        return self._gid_of[local].astype(np.int64)
+
 
 @dataclasses.dataclass(frozen=True)
 class ControllerParams:
@@ -123,6 +137,11 @@ class ControllerParams:
     build_amortize_queries: int = 10_000  # horizon the shadow build is amortized over
     floor_margin: float = 0.01  # extra recall headroom required on the retune window
     repair_anchors: bool = True  # reanchor retunes with breach-repair variants
+    # breach-storm hysteresis: each consecutive rollback multiplies the
+    # post-rollback cooldown (capped), so a latency storm that keeps failing
+    # canaries cannot thrash the controller into a retune loop
+    storm_cooldown_factor: float = 2.0
+    storm_cooldown_cap_ops: int = 1024
 
     def __post_init__(self):
         if not 0.0 < self.traffic_mirror <= 1.0:
@@ -131,6 +150,10 @@ class ControllerParams:
             )
         if min(self.canary_queries, self.retune_iters, self.check_every) < 1:
             raise ValueError("canary_queries, retune_iters, check_every must be >= 1")
+        if self.storm_cooldown_factor < 1.0 or self.storm_cooldown_cap_ops < 1:
+            raise ValueError(
+                "need storm_cooldown_factor >= 1 and storm_cooldown_cap_ops >= 1"
+            )
 
 
 class _Canary:
@@ -200,7 +223,22 @@ class ServingController:
         self.n_rollbacks = 0
         # lifecycle counter offsets across promotes (ledger counters stay
         # monotone even though a fresh instance's counts restart at zero)
-        self._life_off = {"n_seals": 0.0, "n_compactions": 0.0}
+        self._life_off = {
+            "n_seals": 0.0,
+            "n_compactions": 0.0,
+            "n_quarantines": 0.0,
+            "n_rebuilds": 0.0,
+            "n_rebuild_failures": 0.0,
+            "n_seal_retries": 0.0,
+        }
+        # fault-injection state (None unless serve() is given a FaultPlan):
+        # one primary-scoped injector rides across promotes, one shadow-scoped
+        # injector persists across canaries (so a shadow OOM fires once)
+        self._primary_injector: Optional[FaultInjector] = None
+        self._shadow_injector: Optional[FaultInjector] = None
+        self._consec_rollbacks = 0
+        self._straggler = None
+        self._last_snapshot: Optional[Dict[str, Any]] = None
 
     # ------------------------------------------------------------------
     # session snapshot / rollback (checkpoint-exact)
@@ -227,12 +265,21 @@ class ServingController:
         config: Dict[str, Any],
         ground_truth: Optional[np.ndarray] = None,
         guard: bool = True,
+        fault_plan: Optional[FaultPlan] = None,
     ) -> Dict[str, Any]:
         """Replay ``trace`` under the control loop, starting from ``config``.
 
         ``guard=False`` runs the monitor-only baseline: identical serving,
         SLO accounting and ledger, but breaches never trigger retunes — the
         frozen arm the serving benchmark compares against.
+
+        ``fault_plan`` arms chaos: a primary-scoped injector on the serving
+        engine (riding across promotes) and a shadow-scoped one shared by
+        every canary build. The controller then additionally tracks engine
+        health transitions, aborts canaries struck by faults mid-mirror
+        (checkpoint-exact), applies breach-storm hysteresis after rollbacks,
+        and scores every flush's *visible-set* recall against the brute-force
+        oracle restricted to searchable vectors.
         """
         if guard and self.session is None:
             raise ValueError("guarded serving requires a session (tuner) to retune with")
@@ -249,6 +296,15 @@ class ServingController:
         )
         primary.bootstrap(trace.base, np.arange(trace.n_base))
         attach_live(self.ledger, primary.live)
+        self._straggler = attach_straggler(self.ledger, primary.live, self._straggler)
+        all_vecs: Optional[np.ndarray] = None
+        flush_vis: List[Dict[str, Any]] = []
+        coverage_min = 1.0
+        if fault_plan is not None:
+            self._primary_injector = FaultInjector(fault_plan, scope="primary")
+            self._shadow_injector = FaultInjector(fault_plan, scope="shadow")
+            primary.live.arm_faults(self._primary_injector)
+            all_vecs = trace.all_vectors()
         config = dict(config)
         config_history = [{"op": 0, "time": 0.0, "config": dict(config)}]
 
@@ -260,6 +316,7 @@ class ServingController:
         last_tick_op = 0
         last_tick_time = 0.0
         cooldown_until = -1
+        last_health = "healthy"
         violation_time = 0.0
         recall_floor_time = 0.0
         breached_now = False
@@ -269,15 +326,23 @@ class ServingController:
         def promote(c: _Canary, op_i: int, t: float, p_score, c_score) -> None:
             nonlocal primary, config, cooldown_until
             stats = primary.live.stats()
-            self._life_off["n_seals"] += stats["n_seals"]
-            self._life_off["n_compactions"] += stats["n_compactions"]
+            for key in self._life_off:
+                self._life_off[key] += stats.get(key, 0)
             primary = c.shadow  # the old index is dropped here
             config = dict(c.shadow.config)
             attach_live(self.ledger, primary.live)
+            self._straggler = attach_straggler(
+                self.ledger, primary.live, self._straggler
+            )
+            if self._primary_injector is not None:
+                # the promoted engine carried the shadow-scoped injector while
+                # it was a canary; the primary fault clock takes over now
+                primary.live.arm_faults(self._primary_injector)
             config_history.append(
                 {"op": int(op_i), "time": float(t), "config": dict(config)}
             )
             self.n_promotes += 1
+            self._consec_rollbacks = 0
             self.ledger.counter("vdms_promote_total").inc()
             self.monitor.reset()
             if self.detector is not None:
@@ -292,12 +357,27 @@ class ServingController:
             nonlocal cooldown_until
             self._restore(c.snapshot)
             self.n_rollbacks += 1
+            self._consec_rollbacks += 1
             self.ledger.counter("vdms_rollback_total").inc()
-            cooldown_until = op_i + p.cooldown_ops
+            cooldown_until = op_i + self._rollback_cooldown()
             self._event(
                 "rollback", op_i, t,
                 primary_score=list(p_score), candidate_score=list(c_score),
             )
+
+        def abort_canary(op_i: int, t: float, reason: str) -> None:
+            # a fault struck mid-mirror: the comparison is contaminated, so
+            # drop the shadow and restore the session checkpoint-exactly —
+            # hysteresis cooldown applies (a storm must not thrash retunes)
+            nonlocal canary, cooldown_until
+            self._restore(canary.snapshot)
+            self.n_rollbacks += 1
+            self._consec_rollbacks += 1
+            self.ledger.counter("vdms_rollback_total").inc()
+            self.ledger.counter("vdms_canary_fault_abort_total").inc()
+            cooldown_until = op_i + self._rollback_cooldown()
+            self._event("canary_fault_abort", op_i, t, reason=reason)
+            canary = None
 
         def decide(c: _Canary, op_i: int, t: float) -> None:
             nonlocal canary
@@ -337,7 +417,7 @@ class ServingController:
             canary = None
 
         def flush(op_i: int) -> None:
-            nonlocal search_s
+            nonlocal search_s, coverage_min
             if not pending:
                 return
             rows = np.asarray(pending, np.int64)
@@ -353,9 +433,41 @@ class ServingController:
             self.monitor.observe_recall(recall)
             recall_probe.observe(recall)
             self.monitor.observe_mem(primary.live.memory_gib())
+            if fault_plan is not None:
+                # honest degraded-mode accounting: score this flush against
+                # the brute-force oracle restricted to the vectors a search
+                # could actually have returned (searchable = visible minus
+                # quarantined segments minus the graceful-hidden tail)
+                cov = float(primary.live.last_coverage)
+                coverage_min = min(coverage_min, cov)
+                self.ledger.gauge("vdms_coverage").set(cov)
+                svis = primary.searchable_gids()
+                dead = np.ones(all_vecs.shape[0], bool)
+                dead[svis] = False
+                vis_gt = exact_topk_masked(all_vecs, q, dead, k)
+                vrecall = float(recall_at_k_masked(ids[:, :k], vis_gt[:, :k]))
+                flush_vis.append(
+                    {
+                        "op": int(op_i),
+                        "rows": int(rows.size),
+                        "visible": int(svis.size),
+                        "coverage": cov,
+                        "recall": vrecall,
+                    }
+                )
             if canary is not None:
+                t_now = float(trace.times[min(op_i, trace.n_ops - 1)])
+                if fault_plan is not None and (
+                    primary.live.quarantined or primary.live._pending_seal is not None
+                ):
+                    abort_canary(op_i, t_now, "primary_fault")
+                    return
                 m = int(math.ceil(p.traffic_mirror * rows.size))
-                s_ids, _ = canary.shadow.search(q[:m], k, mode=self.mode)
+                try:
+                    s_ids, _ = canary.shadow.search(q[:m], k, mode=self.mode)
+                except FaultError:
+                    abort_canary(op_i, t_now, "shadow_fault")
+                    return
                 canary.primary_lat.extend(lat[:m].tolist())
                 canary.shadow_lat.extend(canary.shadow.live.last_latencies.tolist())
                 canary.primary_recall.append(
@@ -372,6 +484,7 @@ class ServingController:
         def control_tick(op_i: int, t: float) -> None:
             nonlocal last_tick_op, last_tick_time, violation_time, canary
             nonlocal recall_floor_time, breached_now, recall_breached_now
+            nonlocal last_health, cooldown_until
             # integrate violation time over the elapsed interval first: the
             # state observed at the previous tick held for [last_tick, now)
             dt = max(t - last_tick_time, 0.0)
@@ -405,17 +518,32 @@ class ServingController:
                     self._event("drift", op_i, t)
             stats = primary.live.stats()
             adj = dict(stats)
-            adj["n_seals"] = stats["n_seals"] + self._life_off["n_seals"]
-            adj["n_compactions"] = (
-                stats["n_compactions"] + self._life_off["n_compactions"]
-            )
+            for key, off in self._life_off.items():
+                adj[key] = stats.get(key, 0) + off
             observe_stats(self.ledger, adj)
+            health = primary.live.health()
+            if health != last_health:
+                self._event("health", op_i, t, state=health, prev=last_health)
+                last_health = health
             last_tick_op, last_tick_time = op_i, t
             if not guard or canary is not None or op_i < cooldown_until:
                 return
             if status.ok and not drift_fired:
                 return
-            canary = self._start_canary(trace, config, primary, op_i, t)
+            try:
+                canary = self._start_canary(trace, config, primary, op_i, t)
+            except ShadowBuildOOM as e:
+                # the shadow build itself blew up: restore the pre-retune
+                # checkpoint so the session is as if the retune never ran,
+                # and back off (hysteresis) before trying again
+                self._restore(self._last_snapshot)
+                self.n_rollbacks += 1
+                self._consec_rollbacks += 1
+                self.ledger.counter("vdms_rollback_total").inc()
+                self.ledger.counter("vdms_canary_fault_abort_total").inc()
+                cooldown_until = op_i + self._rollback_cooldown()
+                self._event("canary_aborted_oom", op_i, t, reason=str(e))
+                canary = None
 
         # --- replay -------------------------------------------------------
         for i in range(trace.n_ops):
@@ -463,7 +591,42 @@ class ServingController:
         overall_recall = float(
             recall_at_k_masked(preds[:, :k], gt[:, :k]) if trace.n_searches else 0.0
         )
+        report_extra: Dict[str, Any] = {"health": primary.live.health()}
+        if fault_plan is not None:
+            stats = primary.live.stats()
+            n_rows = sum(f["rows"] for f in flush_vis)
+            report_extra["visible_recall"] = (
+                float(sum(f["recall"] * f["rows"] for f in flush_vis) / n_rows)
+                if n_rows
+                else 1.0
+            )
+            report_extra["flush_visibility"] = flush_vis
+            report_extra["fault"] = {
+                "plan": fault_plan.to_dict(),
+                "n_injected": int(
+                    self._primary_injector.n_injected
+                    + self._shadow_injector.n_injected
+                ),
+                "n_quarantines": int(
+                    stats["n_quarantines"] + self._life_off["n_quarantines"]
+                ),
+                "n_rebuilds": int(
+                    stats["n_rebuilds"] + self._life_off["n_rebuilds"]
+                ),
+                "n_rebuild_failures": int(
+                    stats["n_rebuild_failures"]
+                    + self._life_off["n_rebuild_failures"]
+                ),
+                "n_seal_retries": int(
+                    stats["n_seal_retries"] + self._life_off["n_seal_retries"]
+                ),
+                "n_canary_fault_aborts": int(
+                    self.ledger.counter("vdms_canary_fault_abort_total").value
+                ),
+                "coverage_min": float(coverage_min),
+            }
         return {
+            **report_extra,
             "guard": bool(guard),
             "trace": trace.name,
             "n_ops": int(trace.n_ops),
@@ -487,6 +650,18 @@ class ServingController:
             "final_stats": primary.live.stats(),
         }
 
+    def _rollback_cooldown(self) -> int:
+        """Post-rollback cooldown with breach-storm hysteresis: doubles (by
+        ``storm_cooldown_factor``) per consecutive rollback, capped."""
+        p = self.params
+        n = max(self._consec_rollbacks, 1) - 1
+        return int(
+            min(
+                p.cooldown_ops * p.storm_cooldown_factor**n,
+                p.storm_cooldown_cap_ops,
+            )
+        )
+
     # ------------------------------------------------------------------
     # retune + canary start
     # ------------------------------------------------------------------
@@ -508,6 +683,7 @@ class ServingController:
             self._event("retune_skipped", op_i, t, reason="window has too few searches")
             return None
         snap = self._snapshot()
+        self._last_snapshot = snap
         env = VDMSTuningEnv(
             trace=window,
             workload="streaming",
@@ -593,6 +769,10 @@ class ServingController:
             seed=self.seed + 1 + self.n_retunes,
             compact_threshold=self.compact_threshold,
         )
+        if self._shadow_injector is not None:
+            # armed before bootstrap so a scheduled shadow OOM can strike the
+            # canary build itself (the injector persists across canaries)
+            shadow.live.arm_faults(self._shadow_injector)
         shadow.bootstrap(trace.all_vectors()[vis], vis)
         return shadow
 

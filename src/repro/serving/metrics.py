@@ -282,7 +282,29 @@ def serving_ledger() -> MetricsLedger:
     led.counter("vdms_promote_total", "Canary promotions (shadow replaced primary)")
     led.counter("vdms_rollback_total", "Canary rollbacks (checkpoint-exact)")
     led.counter("vdms_shadow_build_seconds_total", "Analytic build cost charged for shadow instances")
+    # fault-injection / degraded-mode instruments (all stay zero fault-free)
+    led.counter("vdms_fault_injected_total", "Faults applied by the armed FaultPlan")
+    led.counter("vdms_quarantine_total", "Sealed segments quarantined (loss/corruption)")
+    led.counter("vdms_rebuild_total", "Quarantined segments rebuilt from the vector store")
+    led.counter("vdms_rebuild_failure_total", "Quarantine rebuilds whose retry budget exhausted")
+    led.counter("vdms_seal_retry_total", "Crashed incremental builds retried with backoff")
+    led.counter("vdms_canary_fault_abort_total", "Canaries aborted because a fault struck mid-mirror")
+    led.gauge("vdms_coverage", "Visible fraction served by the last search (1.0 = full)")
+    led.gauge("vdms_quarantined_segments", "Segments currently quarantined")
+    led.gauge("vdms_health_state", "Engine health: 0=healthy 1=rebuilding 2=degraded")
+    led.gauge("vdms_straggler_flagged", "Straggler-flagged search calls (StragglerMonitor)")
     return led
+
+
+def ledger_table() -> str:
+    """Markdown table of the standard serving-ledger metrics — the generated
+    block the README embeds (doc-sync-tested, like the kernel table)."""
+    led = serving_ledger()
+    lines = ["| metric | kind | description |", "| --- | --- | --- |"]
+    for name in led.names():
+        m = led.get(name)
+        lines.append(f"| `{name}` | {m.kind} | {m.help} |")
+    return "\n".join(lines)
 
 
 def attach_live(ledger: MetricsLedger, live) -> None:
@@ -312,14 +334,45 @@ def observe_stats(ledger: MetricsLedger, stats: Dict[str, float]) -> None:
     ledger.gauge("vdms_seal_debt_seconds").set(
         stats["seal_build_model_s"] + stats["bootstrap_build_model_s"]
     )
+    # fault/degraded-mode gauges: .get-guarded so snapshots from engines
+    # predating the fault layer still sync cleanly
+    ledger.gauge("vdms_coverage").set(float(stats.get("coverage", 1.0)))
+    ledger.gauge("vdms_quarantined_segments").set(float(stats.get("quarantined_segments", 0)))
+    ledger.gauge("vdms_health_state").set(float(stats.get("health_code", 0)))
     for counter_name, key in (
         ("vdms_seals_total", "n_seals"),
         ("vdms_compactions_total", "n_compactions"),
+        ("vdms_fault_injected_total", "n_faults_injected"),
+        ("vdms_quarantine_total", "n_quarantines"),
+        ("vdms_rebuild_total", "n_rebuilds"),
+        ("vdms_rebuild_failure_total", "n_rebuild_failures"),
+        ("vdms_seal_retry_total", "n_seal_retries"),
     ):
         c = ledger.counter(counter_name)
-        delta = float(stats[key]) - c.value
+        delta = float(stats.get(key, 0.0)) - c.value
         if delta > 0:
             c.inc(delta)
+
+
+def attach_straggler(ledger: MetricsLedger, live, monitor=None):
+    """Wire the fault-tolerance :class:`~repro.ft.monitor.StragglerMonitor`
+    into the serving latency path: every search call's elapsed time is a
+    "step" the monitor judges against its trailing median, and the flagged
+    count is exported as the ``vdms_straggler_flagged`` gauge. Returns the
+    monitor (created with serving-friendly defaults when not given) so the
+    controller can poll ``should_replace``."""
+    from ..ft.monitor import StragglerMonitor
+
+    if monitor is None:
+        monitor = StragglerMonitor(window=32, threshold=3.0, patience=4)
+    flagged = ledger.gauge("vdms_straggler_flagged")
+
+    def hook(nq: int, latencies: np.ndarray, elapsed: float) -> None:
+        monitor.record(len(monitor.history), float(elapsed))
+        flagged.set(float(sum(1 for s in monitor.history if s.flagged)))
+
+    live.search_hooks.append(hook)
+    return monitor
 
 
 def percentiles(values: Sequence[float], qs: Sequence[float] = (50.0, 95.0, 99.0)) -> Dict[str, float]:

@@ -17,6 +17,17 @@ from .engine import (
     measure_batch,
     set_search_pipeline,
 )
+from .faults import (
+    BuildCrashFault,
+    FaultError,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    ShadowBuildOOM,
+    TransientEngineFault,
+    canned_fault_plans,
+    classify_eval_error,
+)
 from .indexes import (
     IndexBundle,
     build_index,
@@ -55,9 +66,13 @@ def __getattr__(name: str):
 
 
 __all__ = [
-    "DRIFT_SCHEDULES", "INDEX_TYPES", "IndexBundle", "IndexFamily", "LiveVDMS",
-    "SegmentPlan", "VDMSInstance", "VDMSTuningEnv", "VectorDataset",
+    "BuildCrashFault", "DRIFT_SCHEDULES", "FaultError", "FaultEvent",
+    "FaultInjector", "FaultPlan", "INDEX_TYPES", "IndexBundle", "IndexFamily",
+    "LiveVDMS",
+    "SegmentPlan", "ShadowBuildOOM", "TransientEngineFault", "VDMSInstance",
+    "VDMSTuningEnv", "VectorDataset",
     "WorkloadTrace", "batch_signature", "blend_vectors", "build_index",
+    "canned_fault_plans", "classify_eval_error",
     "concat_bundles", "dataset_names", "exact_topk", "exact_topk_masked",
     "frozen_state", "fused_pipeline_table", "get_family", "get_search_pipeline",
     "live_seg_size", "make_dataset", "make_space",

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .datasets import VectorDataset, recall_at_k
+from .faults import HEALTH_CODE, BuildCrashFault, FaultInjector, TransientEngineFault
 from .indexes import (
     IndexBundle,
     build_index,
@@ -466,6 +467,23 @@ class LiveVDMS:
         self.queries_served = 0
         self.last_latencies: np.ndarray = np.empty(0, np.float64)
         self.search_hooks: List[Callable[[int, np.ndarray, float], None]] = []
+        # fault-injection + degraded mode. Everything below is inert until
+        # ``arm_faults`` installs an injector: every fault branch is gated on
+        # ``self._faults is not None`` so the unarmed engine is byte-identical
+        # to one that never heard of faults.
+        self._faults: FaultInjector | None = None
+        # sealed segment -> repair state while quarantined
+        self.quarantined: Dict[int, Dict[str, Any]] = {}
+        # per-sealed-segment build provenance ({"salt", "first"}) so a
+        # quarantined segment can be rebuilt bitwise-identically: the same
+        # fold_in salt + frozen-calibration choice replays the same build
+        self._seg_meta: List[Dict[str, Any]] = []
+        self._pending_seal: Dict[str, int] | None = None  # crashed-seal backoff
+        self.last_coverage = 1.0  # visible fraction served by the last search
+        self.n_quarantines = 0
+        self.n_rebuilds = 0
+        self.n_rebuild_failures = 0  # rebuilds whose retry budget exhausted
+        self.n_seal_retries = 0  # crashed incremental builds (seal/compact)
 
     # --- state views ---------------------------------------------------
     @property
@@ -510,6 +528,16 @@ class LiveVDMS:
             "compile_s": float(self.compile_s),
             "mem_gib": float(self.memory_gib()),
             "queries_served": int(self.queries_served),
+            # degraded-mode / fault-injection telemetry (all zero when no
+            # FaultPlan has ever been armed)
+            "coverage": float(self.last_coverage),
+            "quarantined_segments": len(self.quarantined),
+            "n_quarantines": int(self.n_quarantines),
+            "n_rebuilds": int(self.n_rebuilds),
+            "n_rebuild_failures": int(self.n_rebuild_failures),
+            "n_seal_retries": int(self.n_seal_retries),
+            "n_faults_injected": int(self._faults.n_injected if self._faults else 0),
+            "health_code": HEALTH_CODE[self.health()],
         }
 
     # --- ingestion -----------------------------------------------------
@@ -517,6 +545,10 @@ class LiveVDMS:
         """Bulk-load the pre-replay corpus (sealing as segments fill); the
         time spent is the initial ``build_time`` (index-building cost), not
         replay-time ingest overhead — the seal counters reset afterwards."""
+        if self._faults is not None:
+            # shadow-scoped injectors fail the matching bootstrap ordinal
+            # (injected OOM) before any vector lands
+            self._faults.on_bootstrap(int(np.asarray(base).shape[0]))
         t0 = time.perf_counter()
         self.insert(base)
         self.build_time += time.perf_counter() - t0
@@ -527,6 +559,8 @@ class LiveVDMS:
     def insert(self, vecs: np.ndarray) -> np.ndarray:
         """Append vectors (d,) or (n, d); seals segments as the tail fills.
         Returns the assigned global ids."""
+        if self._faults is not None:
+            self._fault_tick()
         vecs = np.asarray(vecs, np.float32)
         if vecs.ndim == 1:
             vecs = vecs[None]
@@ -541,50 +575,96 @@ class LiveVDMS:
         self.n_total += n
         self.tail.extend(int(g) for g in gids)
         while len(self.tail) >= self.seg_size:
-            self._seal()
+            if self._pending_seal is not None:
+                break  # a crashed seal is backing off; the fault clock retries it
+            if not self._try_seal():
+                break
         return gids
 
-    def _build_one(self, ids_row: np.ndarray) -> IndexBundle:
-        """Incremental index build for one packed segment (gid -1 = padding)."""
+    def _build_one(
+        self,
+        ids_row: np.ndarray,
+        salt: int | None = None,
+        use_frozen: bool | None = None,
+        context: str = "seal",
+    ) -> IndexBundle:
+        """Incremental index build for one packed segment (gid -1 = padding).
+
+        ``salt``/``use_frozen`` default to the live counters (normal seal /
+        compaction path); a quarantine rebuild passes the segment's recorded
+        provenance instead, replaying the original deterministic build —
+        same key, same calibration choice — bitwise-identically."""
         seg = np.zeros((1, self.seg_size, self.dim), np.float32)
         valid = ids_row >= 0
         seg[0, valid] = self.store[ids_row[valid]]
-        key = jax.random.fold_in(self._key, self.n_seals + self.n_compactions)
-        first = self._frozen is None
+        if salt is None:
+            salt = self.n_seals + self.n_compactions
+        key = jax.random.fold_in(self._key, salt)
+        first = (self._frozen is None) if use_frozen is None else (not use_frozen)
         self.seal_build_model_s += analytic_build_seconds(
             self.config["index_type"], self.config, self.seg_size, self.dim, first
         )
+        if self._faults is not None:
+            # after the analytic charge: crashed attempts still cost build time
+            self._faults.on_build(context)
         b = build_index(
             key, seg, ids_row[None], self.config["index_type"], self.config,
-            self._sys, frozen=self._frozen,
+            self._sys, frozen=None if first else self._frozen,
         )
         jax.block_until_ready(list(b.arrays.values()))
-        if first:
+        if self._frozen is None:
             self._frozen = frozen_state(b)
         return b
 
-    def _seal(self) -> None:
+    def _try_seal(self) -> bool:
+        """Seal one full tail slice. Returns False if the build crashed (the
+        tail stays intact and a backoff retry is scheduled on the fault
+        clock); raises :class:`TransientEngineFault` once the retry budget
+        is exhausted."""
         t0 = time.perf_counter()
         ids = np.asarray(self.tail[: self.seg_size], np.int32)
+        salt = self.n_seals + self.n_compactions
+        first = self._frozen is None
+        try:
+            b = self._build_one(ids, context="seal")
+        except BuildCrashFault:
+            self.seal_build_s += time.perf_counter() - t0
+            self.n_seal_retries += 1
+            attempts = 1 if self._pending_seal is None else self._pending_seal["attempts"] + 1
+            plan = self._faults.plan
+            if attempts > plan.max_seal_retries:
+                self._pending_seal = None
+                raise TransientEngineFault(
+                    f"seal crashed {attempts} times (budget {plan.max_seal_retries})"
+                ) from None
+            self._pending_seal = {
+                "attempts": attempts,
+                "next_tick": self._faults.tick + plan.backoff_base_ticks * 2 ** (attempts - 1),
+            }
+            return False
         self.tail = self.tail[self.seg_size :]
-        b = self._build_one(ids)
         self.bundle = b if self.bundle is None else concat_bundles(self.bundle, b)
         self.gid_seg[ids] = len(self.seg_gids)
         self.seg_gids.append(ids)
+        self._seg_meta.append({"salt": salt, "first": first})
         self.n_seals += 1
         self.seal_build_s += time.perf_counter() - t0
         self.seal_history.append(self.n_sealed)
+        self._pending_seal = None
+        return True
 
     def delete(self, gid: int) -> bool:
         """Tombstone one vector; compacts its sealed segment if the dead
         fraction crosses the threshold. Returns False for already-dead ids."""
+        if self._faults is not None:
+            self._fault_tick()
         gid = int(gid)
         if gid < 0 or gid >= self.n_total or not self.alive[gid]:
             return False
         self.alive[gid] = False
         self.n_deletes += 1
         z = int(self.gid_seg[gid])
-        if z >= 0:
+        if z >= 0 and z not in self.quarantined:
             row = self.seg_gids[z]
             valid = row[row >= 0]
             dead_frac = 1.0 - float(self.alive[valid].mean()) if valid.size else 1.0
@@ -599,13 +679,107 @@ class LiveVDMS:
         survivors = valid[self.alive[valid]]
         new_row = np.full(self.seg_size, -1, np.int32)
         new_row[: survivors.size] = survivors
-        b = self._build_one(new_row)
+        salt = self.n_seals + self.n_compactions
+        try:
+            b = self._build_one(new_row, context="compact")
+        except BuildCrashFault:
+            # the old index still serves (tombstones filter at merge); skip —
+            # the next delete past the threshold re-triggers compaction
+            self.seal_build_s += time.perf_counter() - t0
+            self.n_seal_retries += 1
+            return
         self.bundle = replace_segment(self.bundle, z, b)
         self.seg_gids[z] = new_row
+        self._seg_meta[z] = {"salt": salt, "first": False}
         self.gid_seg[survivors] = z
         self.n_compactions += 1
         self.seal_build_s += time.perf_counter() - t0
         self.seal_history.append(self.n_sealed)
+
+    # --- fault injection + degraded mode -------------------------------
+    def arm_faults(self, injector: FaultInjector | None) -> None:
+        """Install (or clear, with ``None``) the fault injector driving this
+        engine's fault clock. Arm after ``bootstrap`` so plan ticks line up
+        with replayed operations rather than bulk-load inserts."""
+        self._faults = injector
+
+    def _fault_tick(self) -> None:
+        """One step of the fault clock: apply newly-due events, then service
+        scheduled repairs (crashed-seal retries, quarantine rebuilds)."""
+        inj = self._faults
+        for e in inj.advance():
+            if self.n_sealed > 0:
+                self._quarantine(e.segment % self.n_sealed, e.kind)
+        self._service_repairs()
+
+    def _quarantine(self, z: int, reason: str) -> None:
+        if z in self.quarantined:
+            return
+        self.quarantined[z] = {
+            "retries": 0,
+            "next_tick": self._faults.tick + self._faults.plan.backoff_base_ticks,
+            "reason": reason,
+            "permanent": False,
+        }
+        self.n_quarantines += 1
+
+    def _service_repairs(self) -> None:
+        inj = self._faults
+        tick, plan = inj.tick, inj.plan
+        if self._pending_seal is not None and tick >= self._pending_seal["next_tick"]:
+            while len(self.tail) >= self.seg_size:
+                if not self._try_seal():
+                    break
+        for z in sorted(self.quarantined):
+            st = self.quarantined[z]
+            if st["permanent"] or tick < st["next_tick"]:
+                continue
+            t0 = time.perf_counter()
+            meta = self._seg_meta[z]
+            try:
+                b = self._build_one(
+                    self.seg_gids[z],
+                    salt=meta["salt"],
+                    use_frozen=not meta["first"],
+                    context="rebuild",
+                )
+            except BuildCrashFault:
+                self.seal_build_s += time.perf_counter() - t0
+                st["retries"] += 1
+                if st["retries"] >= plan.max_rebuild_retries:
+                    st["permanent"] = True  # -> health() == "degraded"
+                    self.n_rebuild_failures += 1
+                else:
+                    st["next_tick"] = tick + plan.backoff_base_ticks * 2 ** st["retries"]
+                continue
+            self.bundle = replace_segment(self.bundle, z, b)
+            del self.quarantined[z]
+            self.n_rebuilds += 1
+            self.seal_build_s += time.perf_counter() - t0
+
+    def searchable_ids(self) -> np.ndarray:
+        """Sorted gids a search can actually return *right now*: alive, not
+        in a quarantined segment, and not hidden behind the graceful-time
+        consistency window — the visible set that honest (partial-coverage)
+        recall accounting is scored against."""
+        mask = self.alive[: self.capacity].copy()
+        m = int(np.ceil((1.0 - self.graceful) * len(self.tail)))
+        hidden = np.asarray(self.tail[m:], np.int32)
+        if hidden.size:
+            mask[hidden] = False
+        for z in self.quarantined:
+            row = self.seg_gids[z]
+            mask[row[row >= 0]] = False
+        return np.flatnonzero(mask).astype(np.int32)
+
+    def health(self) -> str:
+        """``healthy`` | ``rebuilding`` (repairs scheduled and within budget)
+        | ``degraded`` (some quarantined segment exhausted its rebuilds)."""
+        if any(st["permanent"] for st in self.quarantined.values()):
+            return "degraded"
+        if self.quarantined or self._pending_seal is not None:
+            return "rebuilding"
+        return "healthy"
 
     # --- search --------------------------------------------------------
     def _visible_tail(self) -> np.ndarray:
@@ -624,6 +798,8 @@ class LiveVDMS:
         """Search the current visible state. Returns ``(global ids (Q, topk),
         elapsed seconds)`` — analytic mode charges the deterministic cost
         model for the live segment state; wall mode times the dispatch."""
+        if self._faults is not None:
+            self._fault_tick()
         queries = np.asarray(queries, np.float32)
         nq = queries.shape[0]
         b = min(self.batch, max(nq, 1))
@@ -635,7 +811,23 @@ class LiveVDMS:
         ggids = np.full(nb, -1, np.int32)
         ggids[: vis.size] = vis
         growing_j, ggids_j = jnp.asarray(growing), jnp.asarray(ggids)
-        alive_j = jnp.asarray(self.alive)
+        alive_arr = self.alive
+        coverage = 1.0
+        if self._faults is not None and self.quarantined:
+            # degraded mode: mask quarantined segments out of the merge (same
+            # array shape -> no recompile) and report the visible fraction
+            alive_arr = self.alive.copy()
+            sealed_alive = int((self.alive[: self.capacity] & (self.gid_seg >= 0)).sum())
+            lost = 0
+            for z in self.quarantined:
+                row = self.seg_gids[z]
+                valid = row[row >= 0]
+                lost += int(self.alive[valid].sum())
+                alive_arr[valid] = False
+            total = sealed_alive + int(vis.size)
+            coverage = float((total - lost) / max(total, 1))
+        self.last_coverage = coverage
+        alive_j = jnp.asarray(alive_arr)
         use_fused = get_search_pipeline() == "fused"
 
         def dispatch(chunk: np.ndarray) -> np.ndarray:
@@ -696,12 +888,17 @@ class LiveVDMS:
                 self.dim,
                 b,
             )
+        counts = np.minimum(b, nq - b * np.arange(n_chunks))
+        if self._faults is not None:
+            # a latency storm distorts measured time only — never results
+            mult, add = self._faults.latency_shape()
+            if mult != 1.0 or add != 0.0:
+                chunk_s = chunk_s * mult + add * counts
         elapsed = float(chunk_s.sum())
         # per-query wall latency: each chunk's elapsed is split over the real
         # queries it served (the final chunk's padding burden falls on them),
         # so latencies always sum to the batch elapsed — this is what makes
         # serving percentiles and throughput accounting consistent
-        counts = np.minimum(b, nq - b * np.arange(n_chunks))
         lat = np.repeat(chunk_s / np.maximum(counts, 1), counts)
         self.last_latencies = lat
         self.queries_served += nq

@@ -17,6 +17,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 from ..core.objectives import TuningFailure
 from .datasets import VectorDataset
 from .engine import VDMSInstance, batch_signature, measure_batch
+from .faults import FaultInjector, FaultPlan, classify_eval_error
 from .registry import make_space  # noqa: F401  (registry-derived; re-exported)
 from .workload import WorkloadTrace, replay_trace, time_aware_ground_truth
 
@@ -63,6 +64,7 @@ class VDMSTuningEnv:
         trace: Optional[WorkloadTrace] = None,
         n_phases: int = 1,
         compact_threshold: float = 0.3,
+        faults: Union[FaultPlan, FaultInjector, None] = None,
     ):
         if workload not in ("static", "streaming"):
             raise ValueError(f"workload must be 'static' or 'streaming', got {workload!r}")
@@ -70,6 +72,8 @@ class VDMSTuningEnv:
             raise ValueError("static workload requires dataset=")
         if workload == "streaming" and trace is None:
             raise ValueError("streaming workload requires trace=")
+        if faults is not None and workload != "streaming":
+            raise ValueError("fault injection requires the streaming workload")
         self.dataset = dataset
         self.mode = mode
         self.seed = seed
@@ -82,6 +86,16 @@ class VDMSTuningEnv:
         self._phases = trace.split(n_phases) if workload == "streaming" else []
         self._phase_gt: List[Optional[Any]] = [None] * len(self._phases)
         self._phase = 0
+        # one PERSISTENT injector across evaluations: a fail-count schedule
+        # (e.g. "the next 2 builds crash") exhausts across session retries,
+        # so a transiently-faulted config recovers on re-evaluation — the
+        # semantics the RetryPolicy taxonomy is built around. Faulted evals
+        # raise before caching, so retries genuinely re-run the replay.
+        self._fault_injector: Optional[FaultInjector] = (
+            faults
+            if faults is None or isinstance(faults, FaultInjector)
+            else FaultInjector(faults, scope="primary")
+        )
         self.cache: Dict[Tuple, Dict[str, float]] = {}
         self.n_evals = 0
         self.total_replay_time = 0.0
@@ -136,6 +150,7 @@ class VDMSTuningEnv:
                 mode=self.mode,
                 ground_truth=self._phase_gt[self._phase],
                 compact_threshold=self.compact_threshold,
+                fault_injector=self._fault_injector,
             )
             if result["build_time"] + result["seal_build_s"] > self.build_timeout:
                 raise TuningFailure(f"index builds exceeded {self.build_timeout}s")
@@ -154,10 +169,14 @@ class VDMSTuningEnv:
         t0 = time.perf_counter()
         try:
             result = self._measure_one(cfg)
-        except TuningFailure:
-            raise
-        except (ValueError, ZeroDivisionError, RuntimeError) as e:
-            raise TuningFailure(str(e)) from e
+        except Exception as e:
+            # honest taxonomy: config-dependent crashes become TuningFailure
+            # (injected/engine faults as *transient* ones); anything else is
+            # a programmer error and propagates instead of poisoning the GP
+            tf = classify_eval_error(e)
+            if tf is None or tf is e:
+                raise
+            raise tf from e
         finally:
             self.total_replay_time += time.perf_counter() - t0
             self.n_evals += 1
@@ -223,10 +242,11 @@ class VDMSTuningEnv:
             for cfg in cfgs:
                 try:
                     outs.append(self._measure_one(cfg))
-                except TuningFailure as e:
-                    outs.append(e)
-                except (ValueError, ZeroDivisionError, RuntimeError) as e:
-                    outs.append(TuningFailure(str(e)))
+                except Exception as e:
+                    tf = classify_eval_error(e)
+                    if tf is None:
+                        raise  # programmer error — never laundered into feedback
+                    outs.append(tf)
             return outs
 
         def build(cfg: Dict[str, Any]) -> Union[VDMSInstance, TuningFailure]:
@@ -235,18 +255,20 @@ class VDMSTuningEnv:
                 if inst.build_time > self.build_timeout:
                     raise TuningFailure(f"index build exceeded {self.build_timeout}s")
                 return inst
-            except TuningFailure as e:
-                return e
-            except (ValueError, ZeroDivisionError, RuntimeError) as e:
-                return TuningFailure(str(e))
+            except Exception as e:
+                tf = classify_eval_error(e)
+                if tf is None:
+                    raise
+                return tf
 
         def measure_one(inst: VDMSInstance) -> Union[Dict[str, float], TuningFailure]:
             try:
                 return inst.measure(repeats=self.repeats, mode=self.mode)
-            except TuningFailure as e:
-                return e
-            except (ValueError, ZeroDivisionError, RuntimeError) as e:
-                return TuningFailure(str(e))
+            except Exception as e:
+                tf = classify_eval_error(e)
+                if tf is None:
+                    raise
+                return tf
 
         workers = max_workers or self.batch_workers or min(len(cfgs), os.cpu_count() or 4)
         # Wall mode builds sequentially: each instance's build_time is compared
@@ -279,7 +301,10 @@ class VDMSTuningEnv:
                 for i, r in zip(idxs, rs):
                     outs[i] = r
             except (ValueError, ZeroDivisionError, RuntimeError):
-                singles.extend(idxs)  # defensive: re-measure per instance
+                # defensive, not swallowing: the vectorized dispatch failed as
+                # a whole, so re-measure per instance — where measure_one's
+                # taxonomy assigns (or propagates) each config's own error
+                singles.extend(idxs)
         if singles:
             if self.mode == "analytic" and len(singles) > 1 and workers > 1:
                 with ThreadPoolExecutor(max_workers=workers) as ex:

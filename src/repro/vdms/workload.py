@@ -301,6 +301,7 @@ def replay_trace(
     compact_threshold: float = 0.3,
     with_live: bool = False,
     search_hooks: Sequence[Callable] = (),
+    fault_injector=None,
 ):
     """Replay a trace under one configuration and measure the paper's
     objectives in the streaming regime.
@@ -316,13 +317,21 @@ def replay_trace(
     per-search instrumentation (``fn(n_queries, latencies, elapsed)`` — the
     serving metrics ledger's feed). With ``with_live=True`` also returns the
     finished :class:`LiveVDMS` (diagnostics: seal history, visible ids) as a
-    second value.
+    second value. ``fault_injector`` arms a
+    :class:`~repro.vdms.faults.FaultInjector` on the live instance *after*
+    bootstrap (the fault clock ticks over replayed ops, not bulk-load
+    inserts); the result then additionally reports ``coverage_min``,
+    ``n_quarantines`` and ``n_rebuilds`` — absent without an injector, so
+    fault-free results stay byte-identical.
     """
     k = topk or trace.k
     gt = ground_truth if ground_truth is not None else time_aware_ground_truth(trace, k)
     live = LiveVDMS(config, trace.dim, trace.capacity, seed=seed, compact_threshold=compact_threshold)
     live.search_hooks.extend(search_hooks)
     live.bootstrap(trace.base)
+    if fault_injector is not None:
+        live.arm_faults(fault_injector)
+    coverage_min = 1.0
     preds = -np.ones((trace.n_searches, k), np.int32)
     lat_all: List[np.ndarray] = []
     search_s = 0.0
@@ -330,7 +339,7 @@ def replay_trace(
     pending: List[int] = []
 
     def flush():
-        nonlocal search_s
+        nonlocal search_s, coverage_min
         if not pending:
             return
         rows = np.asarray(pending, np.int64)
@@ -338,6 +347,7 @@ def replay_trace(
         preds[rows] = ids
         lat_all.append(live.last_latencies)
         search_s += secs
+        coverage_min = min(coverage_min, live.last_coverage)
         pending.clear()
 
     for i in range(trace.n_ops):
@@ -379,4 +389,8 @@ def replay_trace(
         "lat_p95_s": float(p95),
         "lat_p99_s": float(p99),
     }
+    if fault_injector is not None:
+        result["coverage_min"] = float(coverage_min)
+        result["n_quarantines"] = float(stats["n_quarantines"])
+        result["n_rebuilds"] = float(stats["n_rebuilds"])
     return (result, live) if with_live else result

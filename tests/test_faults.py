@@ -1,0 +1,568 @@
+"""Fault injection, degraded-mode serving, and the honest failure taxonomy.
+
+Covers the robustness contracts:
+* `FaultPlan` is data: JSON round-trips exactly, validates kinds/knobs, and
+  seeded generation is reproducible;
+* the no-fault fast path is untouched: an engine with no plan (or an armed
+  empty plan) replays bit-identically to pre-fault behavior, and no-retry
+  session ledgers carry no retry keys;
+* segment loss degrades honestly: partial results from the searchable set
+  only, `coverage` < 1 while quarantined, and the background rebuild
+  restores the exact pre-fault search results (bitwise build replica);
+* seal crashes retry with backoff instead of raising; exhausted budgets
+  raise `TransientEngineFault`;
+* the taxonomy routes eval errors correctly (transient vs config fault vs
+  programmer error) and `TuningSession` retries transients with backoff,
+  charging the wasted time to the recovered observation;
+* controller hardening: shadow-OOM canary aborts, hysteresis cooldown;
+* straggler monitor wiring and README/ROBUSTNESS doc sync.
+"""
+import copy
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import RetryPolicy, TuningFailure, TuningSession
+from repro.core.baselines import RandomLHS
+from repro.core.space import Param, SearchSpace
+from repro.serving import (
+    ControllerParams,
+    ServingController,
+    SLOSpec,
+    attach_straggler,
+    ledger_table,
+    serving_ledger,
+)
+from repro.vdms import (
+    BuildCrashFault,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    LiveVDMS,
+    ShadowBuildOOM,
+    TransientEngineFault,
+    VDMSTuningEnv,
+    canned_fault_plans,
+    classify_eval_error,
+    make_space,
+    make_trace,
+    replay_trace,
+)
+from repro.vdms.faults import FAULT_KINDS, HEALTH_STATES
+
+#: wall-clock result keys (nondeterministic run-to-run even in analytic mode)
+WALL_KEYS = {"build_time", "compile_time"}
+
+
+def _det(result):
+    return {k: v for k, v in result.items() if k not in WALL_KEYS}
+
+
+def _trace(n_base=400, n_ops=200, seed=0, drift=None):
+    kw = {"drift": drift} if drift else {}
+    return make_trace("glove_like", n_base=n_base, n_ops=n_ops, seed=seed,
+                      mix=(0.3, 0.6, 0.1), **kw)
+
+
+def _cfg(family="FLAT", **over):
+    cfg = dict(make_space().default_config(family),
+               segment_max_size=128, graceful_time=0.0)
+    cfg.update(over)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: data, validation, generation
+# ---------------------------------------------------------------------------
+def test_fault_plan_json_round_trip_exact():
+    plan = canned_fault_plans(200)["latency_storm"]
+    assert FaultPlan.from_json(plan.to_json()) == plan
+    assert FaultPlan.from_dict(json.loads(plan.to_json())) == plan
+    # every event field survives the trip (plans are self-describing)
+    d = plan.to_dict()
+    assert all(set(e) == {f.name for f in dataclasses.fields(FaultEvent)} for e in d["events"])
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(kind="quantum_flip")
+    with pytest.raises(ValueError):
+        FaultEvent(kind="build_crash", fails=0)
+    with pytest.raises(ValueError):
+        FaultEvent(kind="latency_storm", duration_ticks=0)
+    with pytest.raises(ValueError):
+        FaultPlan(backoff_base_ticks=0)
+    with pytest.raises(ValueError):
+        FaultInjector(FaultPlan(), scope="tertiary")
+
+
+def test_fault_plan_generate_is_reproducible():
+    a = FaultPlan.generate(7, horizon_ticks=300)
+    b = FaultPlan.generate(7, horizon_ticks=300)
+    assert a == b and len(a.events) == 3
+    assert FaultPlan.generate(8, horizon_ticks=300) != a
+
+
+# ---------------------------------------------------------------------------
+# no-fault fast path stays byte-identical
+# ---------------------------------------------------------------------------
+def test_unarmed_and_empty_plan_replay_identical():
+    trace = _trace()
+    cfg = _cfg("IVF_SQ8")
+    plain = replay_trace(trace, cfg)
+    empty = replay_trace(trace, cfg, fault_injector=FaultInjector(FaultPlan()))
+    # fault bookkeeping keys appear ONLY when an injector is armed
+    assert "coverage_min" not in plain and "n_quarantines" not in plain
+    assert empty["coverage_min"] == 1.0 and empty["n_quarantines"] == 0
+    for k in _det(plain):
+        assert empty[k] == plain[k], f"fast path drifted on {k!r}"
+
+
+def test_same_plan_replay_is_deterministic():
+    trace = _trace()
+    cfg = _cfg("FLAT")
+    plan = canned_fault_plans(120)["segment_loss"]
+    a = replay_trace(trace, cfg, fault_injector=FaultInjector(plan))
+    b = replay_trace(trace, cfg, fault_injector=FaultInjector(plan))
+    assert _det(a) == _det(b)
+    assert a["n_quarantines"] >= 1  # the plan genuinely fired
+
+
+def test_no_retry_session_ledger_has_no_retry_keys():
+    space = SearchSpace(
+        index_types={"A": [Param("ka", "grid", choices=(1, 2), default=1)]},
+        system_params=[Param("s1", "float", 0.0, 1.0, default=0.5)],
+    )
+    tuner = RandomLHS(space, lambda cfg: {"speed": 1.0, "recall": 0.9}, seed=0)
+    session = TuningSession(tuner)
+    session.run(3)
+    led = session.ledger_dict()
+    assert "n_retries" not in led["totals"]
+    assert all("retries" not in e for r in led["rounds"] for e in r["evals"])
+
+
+# ---------------------------------------------------------------------------
+# degraded mode: quarantine, partial serving, exact rebuild
+# ---------------------------------------------------------------------------
+def test_segment_loss_serves_partial_results_from_searchable_set():
+    trace = _trace(n_base=512)
+    cfg = _cfg("FLAT")
+    live = LiveVDMS(cfg, trace.dim, trace.capacity, seed=0)
+    live.bootstrap(trace.base)
+    # long backoff keeps the quarantine open so we can observe it
+    plan = FaultPlan(
+        events=(FaultEvent(kind="segment_loss", at_tick=2, segment=0),),
+        backoff_base_ticks=1000,
+    )
+    live.arm_faults(FaultInjector(plan))
+    q = trace.queries[:16]
+    ids0, _ = live.search(q, trace.k, mode="analytic")
+    assert live.last_coverage == 1.0
+    ids1, _ = live.search(q, trace.k, mode="analytic")  # tick 2: loss fires
+    assert 0.0 < live.last_coverage < 1.0
+    assert live.health() == "rebuilding"
+    assert live.quarantined and live.stats()["n_quarantines"] == 1
+    svis = live.searchable_ids()
+    got = np.unique(ids1[ids1 >= 0])
+    assert np.isin(got, svis).all(), "served ids outside the searchable set"
+    assert not np.array_equal(ids0, ids1)  # the lost segment really dropped out
+
+
+@pytest.mark.parametrize("family", ["FLAT", "IVF_SQ8"])
+def test_rebuild_restores_exact_prefault_results(family):
+    """The background rebuild is a bitwise replica: after recovery, a faulted
+    engine's searches equal an identical never-faulted engine's exactly."""
+    trace = _trace(n_base=512, n_ops=160, seed=3)
+    cfg = _cfg(family)
+    plan = FaultPlan(
+        events=(
+            FaultEvent(kind="segment_loss", at_tick=30, segment=0),
+            FaultEvent(kind="segment_corruption", at_tick=50, segment=1),
+        ),
+        backoff_base_ticks=2,
+    )
+    engines = []
+    for injector in (None, FaultInjector(plan)):
+        live = LiveVDMS(cfg, trace.dim, trace.capacity, seed=0)
+        live.bootstrap(trace.base)
+        if injector is not None:
+            live.arm_faults(injector)
+        for i in range(trace.n_ops):
+            kind = int(trace.kinds[i])
+            row = int(trace.payload[i])
+            if kind == 0:
+                live.insert(trace.inserts[row])
+            elif kind == 1:
+                live.search(trace.queries[row][None, :], trace.k, mode="analytic")
+            else:
+                live.delete(row)
+        engines.append(live)
+    clean, faulted = engines
+    assert faulted.stats()["n_rebuilds"] == 2
+    assert faulted.health() == "healthy" and not faulted.quarantined
+    ids_clean, _ = clean.search(trace.queries[:32], trace.k, mode="analytic")
+    ids_fault, _ = faulted.search(trace.queries[:32], trace.k, mode="analytic")
+    assert np.array_equal(ids_clean, ids_fault)
+    assert faulted.last_coverage == 1.0
+
+
+def test_seal_crash_retries_with_backoff_then_succeeds():
+    cfg = _cfg("FLAT", segment_max_size=64)
+    live = LiveVDMS(cfg, 16, 1024, seed=0)
+    rng = np.random.default_rng(0)
+    live.bootstrap(rng.standard_normal((16, 16)).astype(np.float32))
+    plan = FaultPlan(
+        events=(FaultEvent(kind="build_crash", at_tick=1, fails=2),),
+        backoff_base_ticks=2, max_seal_retries=6,
+    )
+    live.arm_faults(FaultInjector(plan))
+    for _ in range(120):  # each insert ticks the fault clock
+        live.insert(rng.standard_normal((16,)).astype(np.float32))
+    st = live.stats()
+    assert st["n_seal_retries"] == 2  # crashed twice, retried, then sealed
+    assert st["n_seals"] >= 1
+    assert live._pending_seal is None and live.health() == "healthy"
+
+
+def test_seal_retry_budget_exhaustion_raises_transient():
+    cfg = _cfg("FLAT", segment_max_size=64)
+    live = LiveVDMS(cfg, 16, 1024, seed=0)
+    rng = np.random.default_rng(0)
+    live.bootstrap(rng.standard_normal((16, 16)).astype(np.float32))
+    plan = FaultPlan(
+        events=(FaultEvent(kind="build_crash", at_tick=1, fails=50),),
+        backoff_base_ticks=1, max_seal_retries=2,
+    )
+    live.arm_faults(FaultInjector(plan))
+    with pytest.raises(TransientEngineFault):
+        for _ in range(200):
+            live.insert(rng.standard_normal((16,)).astype(np.float32))
+
+
+def test_rebuild_budget_exhaustion_goes_permanently_degraded():
+    trace = _trace(n_base=512)
+    cfg = _cfg("FLAT")
+    live = LiveVDMS(cfg, trace.dim, trace.capacity, seed=0)
+    live.bootstrap(trace.base)
+    plan = FaultPlan(
+        events=(
+            FaultEvent(kind="segment_loss", at_tick=2, segment=0),
+            FaultEvent(kind="build_crash", at_tick=1, fails=100),
+        ),
+        backoff_base_ticks=1, max_rebuild_retries=2,
+    )
+    live.arm_faults(FaultInjector(plan))
+    q = trace.queries[:4]
+    for _ in range(30):
+        live.search(q, trace.k, mode="analytic")
+    assert live.health() == "degraded"
+    assert live.stats()["n_rebuild_failures"] == 1
+    assert 0.0 < live.last_coverage < 1.0  # still serving, honestly partial
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: generated plans replay bit-identically
+# ---------------------------------------------------------------------------
+def test_generated_plans_replay_bit_identical():
+    hyp = pytest.importorskip("hypothesis", reason="optional test dep")
+    from hypothesis import given, settings, strategies as st
+
+    trace = _trace(n_base=256, n_ops=96, seed=1)
+    cfg = _cfg("FLAT", segment_max_size=64)
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**20))
+    def prop(seed):
+        plan = FaultPlan.generate(seed, horizon_ticks=80)
+        try:
+            a = replay_trace(trace, cfg, fault_injector=FaultInjector(plan))
+        except TransientEngineFault:
+            # a legal outcome for brutal plans — but it must be deterministic
+            with pytest.raises(TransientEngineFault):
+                replay_trace(trace, cfg, fault_injector=FaultInjector(plan))
+            return
+        b = replay_trace(trace, cfg, fault_injector=FaultInjector(plan))
+        assert _det(a) == _det(b)
+
+    prop()
+    assert hyp  # silence linters
+
+
+# ---------------------------------------------------------------------------
+# failure taxonomy + session retries
+# ---------------------------------------------------------------------------
+def test_classify_eval_error_taxonomy():
+    tf = TuningFailure("already classified")
+    assert classify_eval_error(tf) is tf
+    out = classify_eval_error(TransientEngineFault("gave up"))
+    assert isinstance(out, TuningFailure) and out.transient
+    out = classify_eval_error(BuildCrashFault("boom"))
+    assert isinstance(out, TuningFailure) and out.transient
+    out = classify_eval_error(ValueError("bad shape"))
+    assert isinstance(out, TuningFailure) and not out.transient
+    out = classify_eval_error(ZeroDivisionError("div"))
+    assert isinstance(out, TuningFailure) and not out.transient
+    assert classify_eval_error(TypeError("programmer error")) is None
+    assert classify_eval_error(KeyError("programmer error")) is None
+
+
+def test_env_routes_faults_and_propagates_programmer_errors(monkeypatch):
+    import repro.vdms.tuning_env as te
+
+    trace = _trace(n_base=256, n_ops=64)
+    env = VDMSTuningEnv(trace=trace, workload="streaming", mode="analytic",
+                        seed=0, n_phases=1)
+    cfg = _cfg("FLAT")
+
+    def boom_type(*a, **kw):
+        raise TypeError("programmer error")
+
+    monkeypatch.setattr(te, "replay_trace", boom_type)
+    with pytest.raises(TypeError):
+        env(dict(cfg))
+
+    def boom_value(*a, **kw):
+        raise ValueError("config-dependent crash")
+
+    monkeypatch.setattr(te, "replay_trace", boom_value)
+    with pytest.raises(TuningFailure) as ei:
+        env(dict(cfg, nprobe=1) if "nprobe" in cfg else dict(cfg))
+    assert not ei.value.transient
+
+
+def test_env_with_fault_plan_raises_transient_failure():
+    # insert-heavy trace so the growing tail actually reaches a seal attempt
+    trace = make_trace("glove_like", n_base=256, n_ops=200, seed=0,
+                       mix=(0.8, 0.15, 0.05))
+    plan = FaultPlan(
+        events=(FaultEvent(kind="build_crash", at_tick=1, fails=100),),
+        backoff_base_ticks=1, max_seal_retries=1,
+    )
+    env = VDMSTuningEnv(trace=trace, workload="streaming", mode="analytic",
+                        seed=0, n_phases=1, faults=plan)
+    with pytest.raises(TuningFailure) as ei:
+        env(_cfg("FLAT", segment_max_size=64))
+    assert ei.value.transient
+    with pytest.raises(ValueError):
+        VDMSTuningEnv(trace=trace, workload="static", faults=plan)
+
+
+class _FlakyBackend:
+    """Transient-fails the first ``fail_times`` calls, then succeeds."""
+
+    def __init__(self, fail_times):
+        self.calls = 0
+        self.fail_times = fail_times
+
+    def __call__(self, cfg):
+        self.calls += 1
+        if self.calls <= self.fail_times:
+            raise TuningFailure("injected flake", transient=True)
+        return {"speed": 10.0, "recall": 0.9, "build_time": 1.0}
+
+
+def _tiny_space():
+    return SearchSpace(
+        index_types={"A": [Param("ka", "grid", choices=(1, 2), default=1)]},
+        system_params=[Param("s1", "float", 0.0, 1.0, default=0.5)],
+    )
+
+
+def test_session_retries_transient_and_charges_cost():
+    backend = _FlakyBackend(fail_times=2)
+    tuner = RandomLHS(_tiny_space(), backend, seed=0)
+    session = TuningSession(
+        tuner, retry=RetryPolicy(max_retries=2, backoff_s=0.0)
+    )
+    session.run(1)
+    assert backend.calls == 3  # two flakes + the recovery
+    obs = tuner.history[0]
+    assert not obs.failed  # the GP sees a NORMAL observation
+    led = session.ledger_dict()
+    assert led["totals"]["n_retries"] == 2
+    rows = [e for r in led["rounds"] for e in r["evals"]]
+    assert rows[0]["retries"] == 2
+    # the wasted attempts' wall time was charged into the eval time
+    assert rows[0]["eval_s"] > 0.0
+
+
+def test_session_retry_budget_exhausts_to_failure_feedback():
+    backend = _FlakyBackend(fail_times=99)
+    tuner = RandomLHS(_tiny_space(), backend, seed=0)
+    session = TuningSession(
+        tuner, retry=RetryPolicy(max_retries=2, backoff_s=0.0)
+    )
+    session.run(1)
+    assert backend.calls == 3  # initial + 2 retries, then give up
+    assert tuner.history[0].failed
+
+
+def test_session_checkpoint_round_trips_mid_retry():
+    backend = _FlakyBackend(fail_times=99)
+    tuner = RandomLHS(_tiny_space(), backend, seed=0)
+    session = TuningSession(
+        tuner, retry=RetryPolicy(max_retries=5, backoff_s=0.125)
+    )
+    cfg = {"index_type": "A", "ka": 1, "s1": 0.5}
+    session._pending = [cfg]
+    session._pending_recommend_s = 0.0
+    session._drain()  # one transient failure -> retry state armed
+    assert session._pending == [cfg]  # config stays at the head of the queue
+    state = session.state_dict()
+    key = TuningSession._cfg_key(cfg)
+    assert state["retry"][key]["attempts"] == 1
+    assert state["retry"][key]["backoff_s"] == pytest.approx(0.125)
+    # restore into a fresh session: backoff state intact, bit-identical
+    fresh = TuningSession(
+        RandomLHS(_tiny_space(), backend, seed=0),
+        retry=RetryPolicy(max_retries=5, backoff_s=0.125),
+    )
+    fresh.load_state_dict(copy.deepcopy(state))
+    assert fresh._retry_state == session._retry_state
+    assert fresh.state_dict()["retry"] == state["retry"]
+    # pre-retry checkpoints (no key) load fine
+    old = {k: v for k, v in state.items() if k != "retry"}
+    fresh.load_state_dict(copy.deepcopy(old))
+    assert fresh._retry_state == {}
+
+
+def test_retry_policy_validation_and_backoff():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(backoff_factor=0.5)
+    with pytest.raises(ValueError):
+        RetryPolicy(eval_timeout_s=0.0)
+    p = RetryPolicy(backoff_s=0.5, backoff_factor=2.0)
+    assert [p.backoff(i) for i in (1, 2, 3)] == [0.5, 1.0, 2.0]
+
+
+def test_eval_timeout_is_transient():
+    import time as _time
+
+    def slow(cfg):
+        _time.sleep(0.5)
+        return {"speed": 1.0, "recall": 0.9}
+
+    tuner = RandomLHS(_tiny_space(), slow, seed=0)
+    session = TuningSession(
+        tuner,
+        retry=RetryPolicy(max_retries=0, backoff_s=0.0, eval_timeout_s=0.05),
+    )
+    session.run(1)
+    assert tuner.history[0].failed  # timed out -> transient -> budget 0 -> fail
+
+
+# ---------------------------------------------------------------------------
+# controller hardening + straggler wiring
+# ---------------------------------------------------------------------------
+def test_rollback_cooldown_hysteresis_grows_and_caps():
+    ctrl = ServingController(
+        SLOSpec(recall_floor=0.9),
+        params=ControllerParams(
+            cooldown_ops=48, storm_cooldown_factor=2.0, storm_cooldown_cap_ops=100
+        ),
+    )
+    expected = {0: 48, 1: 48, 2: 96, 3: 100, 7: 100}
+    for n, want in expected.items():
+        ctrl._consec_rollbacks = n
+        assert ctrl._rollback_cooldown() == want
+    with pytest.raises(ValueError):
+        ControllerParams(storm_cooldown_factor=0.5)
+
+
+def test_shadow_scope_injector_only_serves_oom():
+    plan = canned_fault_plans(200)["latency_storm"]  # has a shadow_oom at ordinal 0
+    shadow = FaultInjector(plan, scope="shadow")
+    assert shadow.advance() == []  # primary events don't leak into shadow scope
+    with pytest.raises(ShadowBuildOOM):
+        shadow.on_bootstrap(64)
+    shadow.on_bootstrap(64)  # the next canary's bootstrap is fine
+    primary = FaultInjector(plan, scope="primary")
+    primary.on_bootstrap(64)  # ooms never fire in primary scope
+
+
+def test_guarded_serve_aborts_canary_on_shadow_oom():
+    trace = _trace(n_base=400, n_ops=260, seed=2, drift="step")
+    env = VDMSTuningEnv(trace=trace.window(0, 100), workload="streaming",
+                        mode="analytic", seed=2, n_phases=1)
+    from repro.core import VDTuner
+
+    tuner = VDTuner(make_space(), env, seed=2, warm_start=True)
+    session = TuningSession(tuner)
+    session.run(4)
+    plan = FaultPlan(events=(FaultEvent(kind="shadow_oom", at_tick=0),))
+    cfg = _cfg("FLAT", segment_max_size=256, graceful_time=0.4)
+    ctrl = ServingController(
+        SLOSpec(recall_floor=0.999, min_samples=8), session=session,
+        params=ControllerParams(
+            check_every=24, canary_queries=16, retune_iters=4,
+            retune_window_ops=128, cooldown_ops=48, min_window_searches=8,
+            repair_anchors=False, floor_margin=0.0,
+        ),
+        seed=2,
+    )
+    report = ctrl.serve(trace, cfg, guard=True, fault_plan=plan)
+    events = [e["event"] for e in report["timeline"]]
+    assert "canary_aborted_oom" in events  # the first canary's build OOMed
+    assert report["n_rollbacks"] >= 1
+    assert ctrl.ledger.counter("vdms_canary_fault_abort_total").value >= 1
+    assert report["fault"]["n_injected"] >= 1
+
+
+def test_straggler_monitor_flags_latency_storm():
+    trace = _trace(n_base=512)
+    cfg = _cfg("FLAT")
+    live = LiveVDMS(cfg, trace.dim, trace.capacity, seed=0)
+    live.bootstrap(trace.base)
+    plan = FaultPlan(
+        events=(
+            FaultEvent(kind="latency_storm", at_tick=12, duration_ticks=100,
+                       latency_mult=50.0, latency_add_s=1e-3),
+        ),
+    )
+    live.arm_faults(FaultInjector(plan))
+    ledger = serving_ledger()
+    monitor = attach_straggler(ledger, live)
+    q = trace.queries[:8]
+    for _ in range(24):  # 12 calm ticks, then the storm hits
+        live.search(q, trace.k, mode="analytic")
+    assert any(s.flagged for s in monitor.history)
+    assert ledger.gauge("vdms_straggler_flagged").value > 0
+    # re-attach keeps the same monitor across promotes
+    assert attach_straggler(ledger, live, monitor) is monitor
+
+
+# ---------------------------------------------------------------------------
+# docs stay in sync
+# ---------------------------------------------------------------------------
+def _repo_root():
+    return pathlib.Path(__file__).resolve().parents[1]
+
+
+def test_readme_ledger_table_in_sync():
+    text = (_repo_root() / "README.md").read_text()
+    begin, end = "<!-- ledger-table:begin -->", "<!-- ledger-table:end -->"
+    assert begin in text and end in text, "README lost the ledger-table markers"
+    block = text.split(begin)[1].split(end)[0].strip()
+    assert block == ledger_table().strip(), (
+        "README ledger table is stale; regenerate with "
+        "python -c \"from repro.serving import ledger_table; print(ledger_table())\""
+    )
+
+
+def test_readme_links_robustness_doc():
+    text = (_repo_root() / "README.md").read_text()
+    assert "docs/ROBUSTNESS.md" in text
+
+
+def test_robustness_doc_covers_taxonomy_and_states():
+    doc = (_repo_root() / "docs" / "ROBUSTNESS.md").read_text()
+    for kind in FAULT_KINDS:
+        assert f"`{kind}`" in doc, f"ROBUSTNESS.md lost fault kind {kind!r}"
+    for state in HEALTH_STATES:
+        assert state.upper() in doc, f"ROBUSTNESS.md lost health state {state!r}"
+    assert "FaultPlan" in doc and "coverage" in doc
