@@ -14,6 +14,14 @@ Mapping (mesh axes ("pod", "data", "model") — "pod" optional):
   heads/ff/vocab/experts/ssm_inner -> (model,)   tensor parallel
   kv_heads   -> (model,) if divisible else None
   fsdp       -> (pod, data)     parameter & optimizer-state sharding
+
+Serving-side (vector search) placement rides the same machinery: a sealed
+VDMS segment stack carries its segment dim as the logical "segments" axis,
+mapped onto the dedicated "shard" mesh axis (:func:`make_shard_mesh`). The
+contract segment placement relies on is in :func:`segment_placement`:
+contiguous blocks, dead padding at the tail, so flattening shards in axis
+order preserves the unsharded segment order — the property that keeps the
+sharded top-k merge tie-breaks identical to single-device results.
 """
 from __future__ import annotations
 
@@ -59,6 +67,10 @@ class ShardingRules:
             "fsdp": dp if fsdp else (),
             "layers": (),
             "replicated": (),
+            # serving: sealed-segment stacks shard their leading segment dim
+            # over the dedicated "shard" axis (see make_shard_mesh); meshes
+            # without that axis leave segment arrays replicated
+            "segments": ("shard",) if "shard" in axes else (),
         }
 
     # ------------------------------------------------------------------
@@ -105,6 +117,46 @@ class ShardingRules:
         if self.mesh is None:
             return None
         return NamedSharding(self.mesh, self.spec(axes, shape))
+
+
+# ---------------------------------------------------------------------------
+# serving-side segment placement (sharded vector search)
+# ---------------------------------------------------------------------------
+def make_shard_mesh(n_shards: Optional[int] = None) -> Mesh:
+    """1-D serving mesh over the "shard" axis. ``n_shards`` defaults to every
+    available device; asking for more shards than devices is an error (use
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to emulate a
+    larger mesh on one host)."""
+    devices = jax.devices()
+    n = len(devices) if n_shards is None else int(n_shards)
+    if n < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n}")
+    if n > len(devices):
+        raise ValueError(
+            f"n_shards={n} exceeds the {len(devices)} available devices; "
+            "emulate more with XLA_FLAGS=--xla_force_host_platform_device_count"
+        )
+    return Mesh(np.asarray(devices[:n]), ("shard",))
+
+
+def segment_placement(n_seg: int, n_shards: int) -> Tuple[int, int, np.ndarray]:
+    """THE placement contract for sealed segments on a shard mesh.
+
+    Returns ``(per_shard, n_pad, shard_of)``: segments are laid out in
+    contiguous blocks of ``per_shard = ceil(n_seg / n_shards)`` — segment
+    ``z`` lives on shard ``z // per_shard`` (``shard_of[z]``) — and the
+    stack is padded with ``n_pad`` dead segments (gids all -1) so every
+    shard holds exactly ``per_shard``. Contiguous blocks + tail padding mean
+    concatenating shard-local stacks in shard order reproduces the original
+    segment order, which is what keeps the merge tree's lowest-flat-index
+    tie-break identical to the unsharded merge.
+    """
+    if n_seg < 0 or n_shards < 1:
+        raise ValueError(f"invalid placement: n_seg={n_seg}, n_shards={n_shards}")
+    per_shard = max(1, -(-n_seg // n_shards))
+    n_pad = per_shard * n_shards - n_seg
+    shard_of = np.arange(n_seg, dtype=np.int32) // per_shard
+    return per_shard, n_pad, shard_of
 
 
 # ---------------------------------------------------------------------------

@@ -141,6 +141,25 @@ def fused_ivf_pq_topk(q, lut, codes, centroids, members, gids, *,
     return jnp.stack([o[0] for o in outs]), jnp.stack([o[1] for o in outs])
 
 
+@partial(jax.jit, static_argnames=("k", "impl"))
+def topk_by_score(ids, sims, k: int, impl: Optional[str] = None):
+    """Top-k-by-score selection over flat candidate lists — the merge-tree
+    primitive behind ``repro.vdms.merge`` (composed / fused / sharded paths).
+
+    ids, sims (B, W) -> (ids_k, sims_k), each (B, k), score-descending with
+    ``lax.top_k`` tie semantics: equal scores keep the lowest flat index, so
+    blockwise prefiltering (per-shard partial top-k) composes with a root
+    merge without reordering ties. ``k`` must be <= W.
+
+    All impls share the XLA lowering today: ``lax.top_k`` already maps to the
+    TPU sort unit, so a dedicated Pallas kernel buys nothing until the merge
+    is fused into the scan epilogue (see docs/KERNELS.md).
+    """
+    del impl  # reserved for a fused Pallas merge epilogue
+    top_s, top_i = jax.lax.top_k(sims, k)
+    return jnp.take_along_axis(ids, top_i, axis=1), top_s
+
+
 @partial(jax.jit, static_argnames=("causal", "window", "impl"))
 def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
                     impl: Optional[str] = None):

@@ -25,8 +25,10 @@ from .metrics import (
     Histogram,
     MetricsLedger,
     attach_live,
+    attach_sharded,
     attach_straggler,
     ledger_table,
+    observe_sharded_stats,
     observe_stats,
     percentiles,
     serving_ledger,
@@ -47,8 +49,10 @@ __all__ = [
     "ServingController",
     "UNIT_BUCKETS",
     "attach_live",
+    "attach_sharded",
     "attach_straggler",
     "ledger_table",
+    "observe_sharded_stats",
     "observe_stats",
     "percentiles",
     "serving_ledger",

@@ -293,6 +293,10 @@ def serving_ledger() -> MetricsLedger:
     led.gauge("vdms_quarantined_segments", "Segments currently quarantined")
     led.gauge("vdms_health_state", "Engine health: 0=healthy 1=rebuilding 2=degraded")
     led.gauge("vdms_straggler_flagged", "Straggler-flagged search calls (StragglerMonitor)")
+    # sharded multi-device serving instruments (1-shard defaults fault-free)
+    led.gauge("vdms_shards", "Shard count of the serving mesh (1 = unsharded)")
+    led.gauge("vdms_shard_skew", "Max/mean sealed-segment imbalance across populated shards")
+    led.gauge("vdms_shard_min_coverage", "Smallest per-shard alive fraction")
     return led
 
 
@@ -352,6 +356,28 @@ def observe_stats(ledger: MetricsLedger, stats: Dict[str, float]) -> None:
         delta = float(stats.get(key, 0.0)) - c.value
         if delta > 0:
             c.inc(delta)
+
+
+def attach_sharded(ledger: MetricsLedger, sharded) -> None:
+    """Wire a :class:`~repro.vdms.sharded.ShardedVDMS` into the ledger:
+    the search-hook stream feeds the same query/latency/QPS instruments as
+    :func:`attach_live`, and :func:`observe_sharded_stats` syncs the shard
+    gauges — ``ShardedVDMS`` exposes the identical hook contract, so this is
+    ``attach_live`` plus one initial gauge sync."""
+    attach_live(ledger, sharded)
+    observe_sharded_stats(ledger, sharded.stats())
+
+
+def observe_sharded_stats(ledger: MetricsLedger, stats: Dict[str, Any]) -> None:
+    """Sync the shard placement/coverage gauges from one
+    ``ShardedVDMS.stats()`` snapshot."""
+    ledger.gauge("vdms_shards").set(float(stats.get("n_shards", 1)))
+    ledger.gauge("vdms_shard_skew").set(float(stats.get("shard_skew", 0.0)))
+    ledger.gauge("vdms_shard_min_coverage").set(
+        float(stats.get("min_shard_coverage", 0.0))
+    )
+    ledger.gauge("vdms_mem_gib").set(float(stats.get("mem_gib", 0.0)))
+    ledger.gauge("vdms_coverage").set(float(stats.get("coverage", 1.0)))
 
 
 def attach_straggler(ledger: MetricsLedger, live, monitor=None):

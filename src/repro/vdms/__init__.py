@@ -36,6 +36,7 @@ from .indexes import (
     replace_segment,
     search_index,
 )
+from .merge import merge_topk
 from .registry import (
     IndexFamily,
     fused_pipeline_table,
@@ -44,15 +45,20 @@ from .registry import (
     registered_families,
     registered_names,
     registry_table,
+    shard_pipeline_table,
     temporary_family,
     unregister_family,
 )
 from .segments import SegmentPlan, live_seg_size, plan_segments, stack_sealed
+from .sharded import ShardedVDMS, shard_invariants_table
 from .tuning_env import VDMSTuningEnv, make_space
 from .workload import (
     DRIFT_SCHEDULES,
     WorkloadTrace,
+    make_query_streams,
     make_trace,
+    poisson_arrivals,
+    replay_query_streams,
     replay_trace,
     time_aware_ground_truth,
 )
@@ -75,11 +81,14 @@ __all__ = [
     "canned_fault_plans", "classify_eval_error",
     "concat_bundles", "dataset_names", "exact_topk", "exact_topk_masked",
     "frozen_state", "fused_pipeline_table", "get_family", "get_search_pipeline",
-    "live_seg_size", "make_dataset", "make_space",
-    "make_trace", "measure_batch", "plan_segments", "recall_at_k",
+    "live_seg_size", "make_dataset", "make_query_streams", "make_space",
+    "make_trace", "measure_batch", "merge_topk", "plan_segments",
+    "poisson_arrivals", "recall_at_k",
     "recall_at_k_masked", "register_family", "registered_families",
-    "registered_names", "registry_table", "replace_segment", "replay_trace",
-    "search_index", "set_search_pipeline",
+    "registered_names", "registry_table", "replace_segment",
+    "replay_query_streams", "replay_trace",
+    "search_index", "set_search_pipeline", "shard_invariants_table",
+    "shard_pipeline_table", "ShardedVDMS",
     "stack_sealed", "temporary_family", "time_aware_ground_truth",
     "unregister_family",
 ]

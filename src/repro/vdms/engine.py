@@ -29,6 +29,7 @@ from .indexes import (
     replace_segment,
     search_index,
 )
+from .merge import merge_topk
 from .registry import get_family
 from .segments import live_seg_size, plan_segments, stack_sealed
 
@@ -148,21 +149,7 @@ def _pipeline_impl(
 
     def chunk_fn(q):
         ids, sims = search_index(bundle, q, k_seg)  # (n_seg, B, k_seg)
-        n_seg, b, ks = ids.shape
-        ids2 = jnp.moveaxis(ids, 0, 1).reshape(b, n_seg * ks)
-        sims2 = jnp.moveaxis(sims, 0, 1).reshape(b, n_seg * ks)
-        if growing.shape[0] > 0:
-            gs = jnp.dot(q, growing.T.astype(q.dtype), preferred_element_type=jnp.float32)
-            gk = min(topk, growing.shape[0])
-            gtop_s, gtop_i = jax.lax.top_k(gs, gk)
-            ids2 = jnp.concatenate([ids2, growing_gids[gtop_i]], axis=1)
-            sims2 = jnp.concatenate([sims2, gtop_s], axis=1)
-        k = min(topk, sims2.shape[1])
-        top_s, top_i = jax.lax.top_k(sims2, k)
-        out = jnp.take_along_axis(ids2, top_i, axis=1)
-        if k < topk:
-            out = jnp.pad(out, ((0, 0), (0, topk - k)), constant_values=-1)
-        return out
+        return merge_topk(ids, sims, q, growing, growing_gids, topk)
 
     return jax.lax.map(chunk_fn, qc)
 
@@ -340,27 +327,8 @@ def _live_chunk(
             **dict(statics),
         )
     bundle = IndexBundle(kind=kind, arrays=arrays, static=dict(statics))
-    sentinel = alive_g.shape[0] - 1
     ids, sims = search_index(bundle, q, k_seg)  # (n_seg, B, k_seg)
-    n_seg, b, ks = ids.shape
-    ids2 = jnp.moveaxis(ids, 0, 1).reshape(b, n_seg * ks)
-    sims2 = jnp.moveaxis(sims, 0, 1).reshape(b, n_seg * ks)
-    ok = alive_g[jnp.where(ids2 >= 0, ids2, sentinel)]
-    sims2 = jnp.where(ok, sims2, -jnp.inf)
-    if growing.shape[0] > 0:
-        gs = jnp.dot(q, growing.T.astype(q.dtype), preferred_element_type=jnp.float32)
-        gs = jnp.where(growing_gids[None, :] >= 0, gs, -jnp.inf)
-        gk = min(topk, growing.shape[0])
-        gtop_s, gtop_i = jax.lax.top_k(gs, gk)
-        ids2 = jnp.concatenate([ids2, growing_gids[gtop_i]], axis=1)
-        sims2 = jnp.concatenate([sims2, gtop_s], axis=1)
-    k = min(topk, sims2.shape[1])
-    top_s, top_i = jax.lax.top_k(sims2, k)
-    out = jnp.take_along_axis(ids2, top_i, axis=1)
-    out = jnp.where(jnp.isfinite(top_s), out, -1)
-    if k < topk:
-        out = jnp.pad(out, ((0, 0), (0, topk - k)), constant_values=-1)
-    return out
+    return merge_topk(ids, sims, q, growing, growing_gids, topk, alive=alive_g)
 
 
 @partial(jax.jit, static_argnames=("topk",))

@@ -22,9 +22,18 @@ Result contract (what the engine relies on):
   padding, see ``VDMSInstance._clamp_ok``) narrows the per-segment width to
   ``min(k_seg, topk)`` — exact because only ``topk`` results survive the
   merge and no dead slot can consume width; live searches never clamp;
-* ``alive`` selects the merge flavor: ``None`` replicates the static
-  ``_pipeline_impl`` chunk merge, a mask replicates ``_live_chunk``'s
-  tombstone filtering (sentinel slot, masked growing gids, -1 on -inf).
+* ``alive`` selects the merge flavor: ``None`` runs the static
+  ``_pipeline_impl`` chunk merge, a mask runs ``_live_chunk``'s tombstone
+  filtering (sentinel slot, masked growing gids, -1 on -inf) — both are the
+  SAME code the engine calls (``repro.vdms.merge.merge_topk``), not copies.
+
+The module also hosts the per-family **shard hooks** (``shard_search``): the
+candidate-generation stage of the sharded engine's merge tree. A shard hook
+runs the family's fused kernels over one shard's local segment stack and
+returns per-segment ``(global ids, sims)`` with composed masking semantics
+(dead slots stay -1/-inf and keep their width, never clamped) — the merge
+itself stays in ``ShardedVDMS``, which feeds every shard's partial top-k
+through the same ``repro.vdms.merge`` arithmetic.
 """
 from __future__ import annotations
 
@@ -32,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels import ops
+from .merge import merge_topk
 
 
 def _map_gids(gids, lids):
@@ -41,62 +51,13 @@ def _map_gids(gids, lids):
     return jnp.where(lids >= 0, ids, -1)
 
 
-def _merge_static(ids, sims, q, growing, growing_gids, topk):
-    """Merge per-segment results with the growing tail — line-for-line the
-    composed ``_pipeline_impl`` chunk merge (dead slots arrive as -1/-inf
-    and consume merge width exactly as in the composed path)."""
-    n_seg, b, ks = ids.shape
-    ids2 = jnp.moveaxis(ids, 0, 1).reshape(b, n_seg * ks)
-    sims2 = jnp.moveaxis(sims, 0, 1).reshape(b, n_seg * ks)
-    if growing.shape[0] > 0:
-        gs = jnp.dot(q, growing.T.astype(q.dtype), preferred_element_type=jnp.float32)
-        gk = min(topk, growing.shape[0])
-        gtop_s, gtop_i = jax.lax.top_k(gs, gk)
-        ids2 = jnp.concatenate([ids2, growing_gids[gtop_i]], axis=1)
-        sims2 = jnp.concatenate([sims2, gtop_s], axis=1)
-    k = min(topk, sims2.shape[1])
-    top_s, top_i = jax.lax.top_k(sims2, k)
-    out = jnp.take_along_axis(ids2, top_i, axis=1)
-    if k < topk:
-        out = jnp.pad(out, ((0, 0), (0, topk - k)), constant_values=-1)
-    return out
-
-
-def _merge_live(ids, sims, q, growing, growing_gids, alive, topk):
-    """Merge with tombstone filtering — line-for-line ``_live_chunk``:
-    global ids gated through ``alive`` (id -1 hits the always-dead sentinel
-    slot), growing gids masked, -inf survivors reported as -1."""
-    sentinel = alive.shape[0] - 1
-    n_seg, b, ks = ids.shape
-    ids2 = jnp.moveaxis(ids, 0, 1).reshape(b, n_seg * ks)
-    sims2 = jnp.moveaxis(sims, 0, 1).reshape(b, n_seg * ks)
-    ok = alive[jnp.where(ids2 >= 0, ids2, sentinel)]
-    sims2 = jnp.where(ok, sims2, -jnp.inf)
-    if growing.shape[0] > 0:
-        gs = jnp.dot(q, growing.T.astype(q.dtype), preferred_element_type=jnp.float32)
-        gs = jnp.where(growing_gids[None, :] >= 0, gs, -jnp.inf)
-        gk = min(topk, growing.shape[0])
-        gtop_s, gtop_i = jax.lax.top_k(gs, gk)
-        ids2 = jnp.concatenate([ids2, growing_gids[gtop_i]], axis=1)
-        sims2 = jnp.concatenate([sims2, gtop_s], axis=1)
-    k = min(topk, sims2.shape[1])
-    top_s, top_i = jax.lax.top_k(sims2, k)
-    out = jnp.take_along_axis(ids2, top_i, axis=1)
-    out = jnp.where(jnp.isfinite(top_s), out, -1)
-    if k < topk:
-        out = jnp.pad(out, ((0, 0), (0, topk - k)), constant_values=-1)
-    return out
-
-
 def _finish(lids, sims, gids, q, growing, growing_gids, alive, topk):
     """Shared epilogue: local→global ids, dead-slot masking (gid < 0 slots
     keep their width but turn -1/-inf, mirroring the composed post-top-k
-    mask), then the static or live merge."""
+    mask), then the shared static/live merge (``repro.vdms.merge``)."""
     ids = _map_gids(gids, lids)
     sims = jnp.where(ids >= 0, sims, -jnp.inf)
-    if alive is None:
-        return _merge_static(ids, sims, q, growing, growing_gids, topk)
-    return _merge_live(ids, sims, q, growing, growing_gids, alive, topk)
+    return merge_topk(ids, sims, q, growing, growing_gids, topk, alive=alive)
 
 
 # ---------------------------------------------------------------------------
@@ -201,3 +162,87 @@ def fused_search_ivf_pqr(
 
 
 fused_search_ivf_pqr.stages = "probe → PQ ADC scan → exact re-rank → top-k"
+
+
+# ---------------------------------------------------------------------------
+# per-family shard hooks (candidate stage of the sharded merge tree)
+# ---------------------------------------------------------------------------
+def shard_search_ivf_sq8(q, arrays, *, k_seg, nprobe):
+    """IVF_SQ8 per-shard candidates via the fused kernel (composed masking:
+    dead slots -1/-inf, full ``k_seg`` width)."""
+    lids, sims = ops.fused_ivf_sq8_topk(
+        q,
+        arrays["codes"],
+        arrays["scale"],
+        arrays["centroids"],
+        arrays["members"],
+        arrays["gids"],
+        nprobe=nprobe,
+        k=k_seg,
+        mask_dead=False,
+    )
+    ids = _map_gids(arrays["gids"], lids)
+    return ids, jnp.where(ids >= 0, sims, -jnp.inf)
+
+
+shard_search_ivf_sq8.stages = "probe → int8 dequant scan → shard top-k"
+
+
+def shard_search_ivf_pq(q, arrays, *, k_seg, nprobe, m, c):
+    """IVF_PQ per-shard candidates via the fused ADC kernel."""
+    b, d = q.shape
+    lut = jnp.einsum("bmd,mcd->bmc", q.reshape(b, m, d // m), arrays["codebooks"])
+    lids, sims = ops.fused_ivf_pq_topk(
+        q,
+        lut,
+        arrays["codes"],
+        arrays["centroids"],
+        arrays["members"],
+        arrays["gids"],
+        nprobe=nprobe,
+        k=k_seg,
+        mask_dead=False,
+    )
+    ids = _map_gids(arrays["gids"], lids)
+    return ids, jnp.where(ids >= 0, sims, -jnp.inf)
+
+
+shard_search_ivf_pq.stages = "probe → PQ ADC scan → shard top-k"
+
+
+def shard_search_ivf_pqr(q, arrays, *, k_seg, nprobe, m, c, reorder_k):
+    """IVF_PQR per-shard candidates: fused PQ scan picks ``reorder_k``
+    candidates per segment, the exact re-rank scores them against the raw
+    vectors, then the per-segment top-k (all inside the shard)."""
+    b, d = q.shape
+    lut = jnp.einsum("bmd,mcd->bmc", q.reshape(b, m, d // m), arrays["codebooks"])
+    lids, _ = ops.fused_ivf_pq_topk(
+        q,
+        lut,
+        arrays["codes"],
+        arrays["centroids"],
+        arrays["members"],
+        arrays["gids"],
+        nprobe=nprobe,
+        k=reorder_k,
+        mask_dead=False,
+    )
+
+    def rerank(data_z, lids_z):
+        vecs = data_z[jnp.maximum(lids_z, 0)].astype(jnp.float32)  # (B, r, d)
+        exact = jnp.einsum("brd,bd->br", vecs, q)
+        return jnp.where(lids_z >= 0, exact, -jnp.inf)
+
+    exact = jax.vmap(rerank)(arrays["data"], lids)  # (n_seg, B, r)
+    kk = min(k_seg, exact.shape[-1])
+    top_s, top_i = jax.lax.top_k(exact, kk)
+    lids2 = jnp.take_along_axis(lids, top_i, axis=2)
+    if kk < k_seg:
+        pad = ((0, 0), (0, 0), (0, k_seg - kk))
+        lids2 = jnp.pad(lids2, pad, constant_values=-1)
+        top_s = jnp.pad(top_s, pad, constant_values=-jnp.inf)
+    ids = _map_gids(arrays["gids"], lids2)
+    return ids, jnp.where(ids >= 0, top_s, -jnp.inf)
+
+
+shard_search_ivf_pqr.stages = "probe → PQ ADC scan → exact re-rank → shard top-k"

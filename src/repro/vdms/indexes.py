@@ -36,7 +36,12 @@ import numpy as np
 
 from ..core.space import Param
 from ..kernels import ops
-from .fused import fused_search_ivf_pq, fused_search_ivf_sq8
+from .fused import (
+    fused_search_ivf_pq,
+    fused_search_ivf_sq8,
+    shard_search_ivf_pq,
+    shard_search_ivf_sq8,
+)
 from .kmeans import kmeans, kmeans_l2
 from .registry import REGISTRY, IndexFamily, get_family
 
@@ -729,6 +734,7 @@ REGISTRY.register(
         search=_search_ivf_sq8,
         shared_arrays=("scale",),
         fused_search=fused_search_ivf_sq8,
+        shard_search=shard_search_ivf_sq8,
         supports_frozen=True,
         chunk_cost=_chunk_cost_ivf(0.5),
         build_cost=_build_cost_sq,
@@ -748,6 +754,7 @@ REGISTRY.register(
         search=_search_ivf_pq,
         shared_arrays=("codebooks",),
         fused_search=fused_search_ivf_pq,
+        shard_search=shard_search_ivf_pq,
         supports_frozen=True,
         chunk_cost=_chunk_cost_ivf_pq,
         build_cost=_build_cost_ivf_pq,

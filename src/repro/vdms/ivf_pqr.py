@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from ..core.space import Param
-from .fused import fused_search_ivf_pqr
+from .fused import fused_search_ivf_pqr, shard_search_ivf_pqr
 from .indexes import (
     _NLIST,
     _NPROBE,
@@ -114,6 +114,7 @@ FAMILY = IndexFamily(
     search=search_ivf_pqr,
     shared_arrays=("codebooks",),
     fused_search=fused_search_ivf_pqr,
+    shard_search=shard_search_ivf_pqr,
     supports_frozen=True,
     chunk_cost=_chunk_cost_ivf_pqr,
     build_cost=_build_cost_ivf_pq,  # re-rank stores raw vectors; build cost is PQ's

@@ -12,6 +12,15 @@ trace — growing-tail appends, seal-and-index events, tombstone deletes with
 compaction — and scores recall against *time-aware* ground truth: the exact
 top-k over the vectors visible (inserted and not deleted) at each query's
 timestamp, computed by :func:`time_aware_ground_truth`.
+
+:func:`replay_query_streams` is the serving-side driver: many concurrent
+query streams with Poisson arrivals (:func:`poisson_arrivals`) offered at a
+target aggregate rate against any engine exposing the ``search(queries,
+topk, mode) -> (ids, elapsed)`` contract (``LiveVDMS``, ``ShardedVDMS``) —
+arrivals queue, dispatch in engine-batch-sized multi-stream micro-batches,
+and every query is charged its full sojourn (queue wait + service), which is
+what makes saturation visible: offered rates above capacity show up as
+unbounded sojourn growth, not as a flattering served-QPS number.
 """
 from __future__ import annotations
 
@@ -394,3 +403,119 @@ def replay_trace(
         result["n_quarantines"] = float(stats["n_quarantines"])
         result["n_rebuilds"] = float(stats["n_rebuilds"])
     return (result, live) if with_live else result
+
+
+# ---------------------------------------------------------------------------
+# high-rate multi-stream Poisson serving driver
+# ---------------------------------------------------------------------------
+def poisson_arrivals(
+    rate: float, n: int, seed: int = 0, t0: float = 0.0
+) -> np.ndarray:
+    """Arrival timestamps of a Poisson process: ``n`` events at ``rate``
+    events/second starting after ``t0`` (exponential i.i.d. gaps)."""
+    if rate <= 0.0:
+        raise ValueError(f"rate must be positive, got {rate}")
+    rng = np.random.default_rng(seed)
+    return t0 + np.cumsum(rng.exponential(1.0 / rate, size=int(n)))
+
+
+def make_query_streams(
+    queries: np.ndarray,
+    n_streams: int,
+    rate: float,
+    n_per_stream: int,
+    seed: int = 0,
+) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """``n_streams`` independent Poisson query streams at ``rate / n_streams``
+    each (their superposition is Poisson at the aggregate ``rate``). Each
+    stream cycles through its round-robin slice of ``queries``. Returns
+    ``[(arrival_times, query_row_indices), ...]`` per stream."""
+    if n_streams < 1:
+        raise ValueError(f"n_streams must be >= 1, got {n_streams}")
+    nq = queries.shape[0]
+    streams = []
+    for s in range(n_streams):
+        times = poisson_arrivals(rate / n_streams, n_per_stream, seed=seed * 1000 + s)
+        rows = (s + np.arange(n_per_stream, dtype=np.int64) * n_streams) % nq
+        streams.append((times, rows.astype(np.int32)))
+    return streams
+
+
+def replay_query_streams(
+    engine,
+    queries: np.ndarray,
+    *,
+    rate: float,
+    n_streams: int = 8,
+    n_per_stream: int = 64,
+    topk: int = 10,
+    mode: str = "analytic",
+    seed: int = 0,
+) -> Dict[str, float]:
+    """Offer multi-stream Poisson load to an engine and measure sustained
+    serving behavior.
+
+    The merged arrival sequence drains through a single batching server:
+    when the engine frees up, every queued arrival (capped at the engine's
+    ``search_batch_size``) dispatches as ONE multi-stream micro-batch —
+    padded to the full batch width so the compiled chunk shape never churns,
+    exactly the shape the engine would serve in production. Service time is
+    the engine's measured ``elapsed`` (deterministic under
+    ``mode="analytic"``); each query's latency is its full sojourn
+    (queue wait + service).
+
+    Returns offered vs served QPS, sojourn percentiles, utilization, and a
+    ``saturated`` flag (mean sojourn of the last quarter more than 4x the
+    first quarter — the queue is growing without bound).
+    """
+    queries = np.asarray(queries, np.float32)
+    streams = make_query_streams(queries, n_streams, rate, n_per_stream, seed=seed)
+    arr = np.concatenate([t for t, _ in streams])
+    rows = np.concatenate([r for _, r in streams])
+    stream_of = np.concatenate(
+        [np.full(t.size, s, np.int32) for s, (t, _) in enumerate(streams)]
+    )
+    order = np.argsort(arr, kind="stable")
+    arr, rows, stream_of = arr[order], rows[order], stream_of[order]
+    n = arr.size
+    batch = int(getattr(engine, "batch", 32))
+    sojourn = np.zeros(n, np.float64)
+    t_free = 0.0
+    busy = 0.0
+    n_batches = 0
+    i = 0
+    while i < n:
+        start = max(t_free, float(arr[i]))
+        j = i + 1
+        while j < n and arr[j] <= start and j - i < batch:
+            j += 1
+        idx = np.arange(i, j)
+        qrows = queries[rows[idx]]
+        if qrows.shape[0] < batch:  # pad to the production chunk shape
+            wrap = np.tile(qrows, (-(-batch // qrows.shape[0]), 1))[:batch]
+            qrows = wrap
+        _, service = engine.search(qrows, topk, mode=mode)
+        done = start + service
+        sojourn[idx] = done - arr[idx]
+        t_free = done
+        busy += service
+        n_batches += 1
+        i = j
+    makespan = max(t_free - float(arr[0]), 1e-9)
+    q1 = sojourn[: max(n // 4, 1)].mean()
+    q4 = sojourn[-max(n // 4, 1) :].mean()
+    per_stream = np.bincount(stream_of, minlength=n_streams)
+    return {
+        "offered_qps": float(rate),
+        "served_qps": float(n / makespan),
+        "n_queries": float(n),
+        "n_streams": float(n_streams),
+        "n_batches": float(n_batches),
+        "mean_batch_occupancy": float(n / max(n_batches, 1)),
+        "utilization": float(busy / makespan),
+        "sojourn_p50_s": float(np.percentile(sojourn, 50.0)),
+        "sojourn_p95_s": float(np.percentile(sojourn, 95.0)),
+        "sojourn_p99_s": float(np.percentile(sojourn, 99.0)),
+        "saturated": float(q4 > 4.0 * max(q1, 1e-9)),
+        "min_stream_queries": float(per_stream.min()),
+    }
