@@ -90,23 +90,28 @@ def matern52(a, b, log_ls, log_sf):
     return sf2 * (1.0 + s5 + (5.0 / 3.0) * r * r) * jnp.exp(-s5)
 
 
-def _kernel_matrix(x, mask, log_ls, log_sf, log_noise):
+def _kernel_matrix(x, mask, log_ls, log_sf, log_noise, noise_scale=1.0):
     """K̃ with exactly-inert padding: masked cross-terms, constant BIG pad
-    diagonal. The Cholesky is block-diagonal [L_real, sqrt(BIG)·I]."""
+    diagonal. The Cholesky is block-diagonal [L_real, sqrt(BIG)·I].
+
+    ``noise_scale`` multiplies the learned observation-noise variance per
+    row (scalar 1.0 or an (n,) vector). Rows imported from another tenant's
+    ledger carry a scale > 1 so they inform the posterior without being
+    trusted as much as locally-measured points."""
     sf2 = jnp.exp(2.0 * log_sf)
     k = matern52(x, x, log_ls, log_sf) * (mask[:, None] * mask[None, :])
-    noise = (sf2 * _NOISE_FLOOR + jnp.exp(2.0 * log_noise) + _JITTER * sf2) * mask + _BIG_NOISE * (
-        1.0 - mask
-    )
+    noise = (
+        sf2 * _NOISE_FLOOR + jnp.exp(2.0 * log_noise) * noise_scale + _JITTER * sf2
+    ) * mask + _BIG_NOISE * (1.0 - mask)
     return k + jnp.diag(noise)
 
 
-def _nll_single(log_ls, log_sf, log_noise, x, y, mask):
+def _nll_single(log_ls, log_sf, log_noise, x, y, mask, noise_scale=1.0):
     """Negative log marginal likelihood for one output (padded rows inert)."""
     n = x.shape[0]
     log_ls = jnp.clip(log_ls, jnp.log(0.05), jnp.log(20.0))
     log_sf = jnp.clip(log_sf, jnp.log(0.05), jnp.log(4.0))
-    k = _kernel_matrix(x, mask, log_ls, log_sf, log_noise)
+    k = _kernel_matrix(x, mask, log_ls, log_sf, log_noise, noise_scale)
     chol = jnp.linalg.cholesky(k)
     alpha = jax.scipy.linalg.cho_solve((chol, True), y)
     # padded rows: y=0 and zero cross-terms, so the quadratic term is exactly
@@ -121,7 +126,7 @@ def _nll_single(log_ls, log_sf, log_noise, x, y, mask):
 
 
 @partial(jax.jit, static_argnames=("steps",))
-def _fit_padded(x, y, mask, key, ls0, sf0, nz0, steps: int):
+def _fit_padded(x, y, mask, key, ls0, sf0, nz0, steps: int, noise_scale=1.0):
     """Adam on the NLL, vmapped over outputs, starting from (ls0, sf0, nz0)
     — the default initialization for cold fits, the previous iteration's
     hyperparameters for warm starts. Returns fitted params + chol/alpha."""
@@ -139,7 +144,7 @@ def _fit_padded(x, y, mask, key, ls0, sf0, nz0, steps: int):
 
         def step(carry, i):
             params, opt_state = carry
-            grads = jax.grad(lambda ps: _nll_single(*ps, x, y_col, mask))(params)
+            grads = jax.grad(lambda ps: _nll_single(*ps, x, y_col, mask, noise_scale))(params)
             new_params, new_state = [], []
             for p, g, (m1, m2), (lo, hi) in zip(params, grads, opt_state, bounds):
                 g = jnp.where(jnp.isfinite(g), g, 0.0)  # NaN-guard the step
@@ -163,18 +168,18 @@ def _fit_padded(x, y, mask, key, ls0, sf0, nz0, steps: int):
     m = y.shape[1]
     keys = jax.random.split(key, m)
     log_ls, log_sf, log_noise = jax.vmap(fit_one, in_axes=(1, 0, 0, 0, 0))(y, keys, ls0, sf0, nz0)
-    chol, alpha = _posterior_padded(log_ls, log_sf, log_noise, x, y, mask)
+    chol, alpha = _posterior_padded(log_ls, log_sf, log_noise, x, y, mask, noise_scale)
     return (log_ls, log_sf, log_noise), chol, alpha
 
 
 @jax.jit
-def _posterior_padded(log_ls, log_sf, log_noise, x, y, mask):
+def _posterior_padded(log_ls, log_sf, log_noise, x, y, mask, noise_scale=1.0):
     """Cholesky + weights per output for fixed hyperparameters (padded rows
     exactly inert). Full refactorization — used after ``fit``; incremental
     growth goes through ``_append_rows``."""
 
     def posterior_terms(ls_i, sf_i, nz_i, y_col):
-        k = _kernel_matrix(x, mask, ls_i, sf_i, nz_i)
+        k = _kernel_matrix(x, mask, ls_i, sf_i, nz_i, noise_scale)
         chol = jnp.linalg.cholesky(k)
         alpha = jax.scipy.linalg.cho_solve((chol, True), y_col)
         return chol, alpha
@@ -252,6 +257,10 @@ class GP:
         self.fit_steps = fit_steps
         self.warm_fit_steps = warm_fit_steps
         self.state: GPState | None = None
+        # optional prior mean callable X (n,d) -> (n,m) in original Y units;
+        # the GP then models residuals Y - mu(X) (transfer warm-starts can
+        # encode a source tenant's response surface here)
+        self._prior_mean = None
 
     @property
     def params(self) -> GPParams:
@@ -269,6 +278,8 @@ class GP:
         Y: np.ndarray,
         init: Optional[GPParams] = None,
         steps: Optional[int] = None,
+        noise_scale: Optional[np.ndarray] = None,
+        prior_mean=None,
     ) -> "GP":
         """Fit hyperparameters by Adam on the NLL.
 
@@ -276,6 +287,14 @@ class GP:
         hyperparameters (running ``warm_fit_steps`` instead of ``fit_steps``
         unless ``steps`` overrides); shape-mismatched ``init`` (e.g. a
         checkpoint from a different space) silently falls back to a cold fit.
+
+        ``noise_scale`` is an optional (n,) per-row multiplier on the learned
+        observation-noise variance — rows transferred from another tenant's
+        ledger carry a scale > 1 so they shape the posterior without being
+        trusted like local measurements. ``prior_mean`` is an optional
+        callable ``X (n,d) -> (n,m)`` in original Y units; the GP fits the
+        residuals and ``predict`` adds the prior back. Both default to the
+        exact pre-existing behavior.
         """
         X = np.asarray(X, np.float32)
         Y = np.asarray(Y, np.float32)
@@ -283,6 +302,9 @@ class GP:
             Y = Y[:, None]
         n, d = X.shape
         m = Y.shape[1]
+        self._prior_mean = prior_mean
+        if prior_mean is not None:
+            Y = Y - np.asarray(prior_mean(X), np.float32).reshape(n, m)
         y_mean = Y.mean(axis=0)
         y_std = Y.std(axis=0) + 1e-8
         Yn = (Y - y_mean) / y_std
@@ -305,10 +327,17 @@ class GP:
             sf0 = np.asarray(init.log_sf, np.float32)
             nz0 = np.asarray(init.log_noise, np.float32)
             n_steps = self.warm_fit_steps if steps is None else steps
+        if noise_scale is None:
+            scale = jnp.float32(1.0)  # scalar broadcast: bitwise the legacy path
+        else:
+            sp = np.ones((n_pad,), np.float32)
+            sp[:n] = np.asarray(noise_scale, np.float32).reshape(n)
+            scale = jnp.asarray(sp)
         self._key, sub = jax.random.split(self._key)
         (log_ls, log_sf, log_noise), chol, alpha = _fit_padded(
             jnp.asarray(xp), jnp.asarray(yp), jnp.asarray(maskp), sub,
             jnp.asarray(ls0), jnp.asarray(sf0), jnp.asarray(nz0), steps=int(n_steps),
+            noise_scale=scale,
         )
         self.state = GPState(
             params=GPParams(log_ls, log_sf, log_noise),
@@ -331,6 +360,9 @@ class GP:
         )
         mean = np.asarray(mean) * np.asarray(s.y_std) + np.asarray(s.y_mean)
         std = np.sqrt(np.asarray(var)) * np.asarray(s.y_std)
+        if self._prior_mean is not None:
+            Xt_np = np.asarray(Xt, np.float32)
+            mean = mean + np.asarray(self._prior_mean(Xt_np), np.float32).reshape(mean.shape)
         return mean, std
 
     def with_capacity(self, n_total: int) -> "GP":
@@ -352,6 +384,7 @@ class GP:
         chol, alpha = _extend_padding(s.chol, s.alpha, n_new)
         out = GP(fit_steps=self.fit_steps, warm_fit_steps=self.warm_fit_steps)
         out._key = self._key
+        out._prior_mean = self._prior_mean
         out.state = GPState(
             params=s.params,
             x=jnp.asarray(xp),
@@ -382,6 +415,8 @@ class GP:
         Y_new = np.asarray(Y_new, np.float32).reshape(-1, m)
         base = self.with_capacity(n_real + X_new.shape[0])
         s = base.state
+        if self._prior_mean is not None:
+            Y_new = Y_new - np.asarray(self._prior_mean(X_new), np.float32).reshape(Y_new.shape)
         Yn_new = (Y_new - np.asarray(s.y_mean)) / np.asarray(s.y_std)
         x, y, mask, chol, alpha = _append_rows(
             s.params.log_ls, s.params.log_sf, s.params.log_noise,
@@ -390,6 +425,7 @@ class GP:
         )
         out = GP(fit_steps=self.fit_steps, warm_fit_steps=self.warm_fit_steps)
         out._key = self._key
+        out._prior_mean = self._prior_mean
         out.state = GPState(
             params=s.params, x=x, y=y, mask=mask, chol=chol, alpha=alpha,
             y_mean=s.y_mean, y_std=s.y_std,

@@ -37,6 +37,8 @@ from concurrent.futures import ThreadPoolExecutor
 from concurrent.futures import TimeoutError as FuturesTimeout
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
+import numpy as np
+
 from .objectives import EvalBackend, TuningFailure
 from .space import Config
 from .tuner import Observation, TunerBase
@@ -499,6 +501,125 @@ class TuningSession:
         if retries:  # only recovered-after-retry rows carry the key, so
             row["retries"] = int(retries)  # no-retry ledgers stay byte-identical
         self.rounds[-1]["evals"].append(row)
+
+    # ------------------------------------------------------------------
+    # external observations & fleet delegation
+    # ------------------------------------------------------------------
+    def tell(
+        self,
+        config: Config,
+        result: Any,
+        eval_time: float = 0.0,
+        recommend_time: float = 0.0,
+        bootstrap: bool = False,
+        noise_scale: float = 1.0,
+    ) -> Observation:
+        """Feed one externally-measured result into the tuner.
+
+        This is the entry point for observations the session did not itself
+        dispatch: live canary measurements from the serving control plane,
+        or another tenant's ledger rows during fleet transfer. The
+        observation lands in the tuner history (feeding the GP, fronts, and
+        abandon bookkeeping) but NOT in the recommend/eval ledger — it is
+        deployment/transfer feedback, not a budgeted BO evaluation.
+        ``bootstrap=True`` additionally keeps it out of the fresh-observation
+        budget count; ``noise_scale > 1`` down-weights it in the GP fit.
+        """
+        obs = self.tuner.tell(
+            dict(config), result, recommend_time=recommend_time, eval_time=eval_time
+        )
+        if bootstrap:
+            obs.bootstrap = True
+        if noise_scale != 1.0:
+            obs.noise_scale = float(noise_scale)
+        return obs
+
+    def import_observations(
+        self,
+        observations: Sequence[Union[Observation, Dict[str, Any]]],
+        noise_scale: float = 1.0,
+        space_signature: Optional[str] = None,
+    ) -> int:
+        """Seed the tuner with observations from another session's ledger.
+
+        Each observation is appended as a §IV-F-style *bootstrap* entry: it
+        feeds the GP (marking its index type "seen", so warm-started tenants
+        skip the mandatory per-type default evaluations) and the Pareto
+        front, but never counts against the fresh-observation budget.
+        Objective values are recomputed from ``raw`` through this tuner's
+        own transform so imports land in local objective units; failed
+        source rows are skipped. ``noise_scale`` (> 1 for cross-tenant
+        imports) rides on each row into the GP's per-row noise hook.
+
+        ``space_signature`` — the source space's ``encoding_signature()`` —
+        guards the registry's uniform encoding: imports are refused unless
+        it matches this tuner's space, since encoded rows would otherwise
+        decode to different configurations.
+        """
+        if space_signature is not None:
+            own = self.tuner.space.encoding_signature()
+            if space_signature != own:
+                raise ValueError(
+                    f"cannot import observations: source space signature "
+                    f"{space_signature!r} != target {own!r}"
+                )
+        n_imported = 0
+        for o in observations:
+            if isinstance(o, dict):
+                o = Observation.from_dict(o)
+            if o.failed:
+                continue
+            raw = dict(o.raw)
+            try:
+                y = np.asarray(self.tuner.transform(raw), np.float64) if raw else None
+            except Exception:
+                continue  # raw lacks what the local objective needs
+            if y is None or not np.all(np.isfinite(y)):
+                continue
+            self.tuner.history.append(
+                Observation(
+                    iteration=len(self.tuner.history),
+                    config=dict(o.config),
+                    y=y,
+                    raw=raw,
+                    recommend_time=0.0,
+                    eval_time=0.0,
+                    failed=False,
+                    bootstrap=True,
+                    noise_scale=float(noise_scale),
+                )
+            )
+            n_imported += 1
+        return n_imported
+
+    def run_round(self, n: int = 1) -> List[Observation]:
+        """Run exactly one ask round (draining any restored pending queue
+        first) and return the observations it produced.
+
+        This is the fleet scheduler's unit of budget delegation: the
+        ``FleetSession`` calls ``run_round`` on whichever tenant it picked,
+        charges the returned observations' evaluation cost to the shared
+        budget, and re-decides. ``n`` caps the batch request passed to
+        ``ask`` (warm-up batches may exceed it, exactly as in ``run``).
+        """
+        start = len(self.tuner.history)
+        try:
+            if not self._pending:
+                t0 = time.perf_counter()
+                cfgs = list(self.tuner.ask(max(int(n), 1)))
+                ask_s = time.perf_counter() - t0
+                if not cfgs:
+                    return []
+                self._pending = cfgs
+                self._pending_recommend_s = ask_s / len(cfgs)
+                self.rounds.append(
+                    {"round": len(self.rounds), "n_asked": len(cfgs), "ask_s": ask_s, "evals": []}
+                )
+            while self._pending:
+                self._drain()
+        except StopSession:
+            pass
+        return list(self.tuner.history[start:])
 
     # ------------------------------------------------------------------
     # drift tracking (moving-optimum workloads)

@@ -14,6 +14,8 @@ their encoded default, so the GP input is always fully specified.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 import math
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
@@ -131,6 +133,23 @@ class SearchSpace:
             index_types={f.name: tuple(f.params) for f in families},
             system_params=system_params,
         )
+
+    def encoding_signature(self) -> str:
+        """Stable digest of the encoded layout: type names, column order, and
+        every parameter's kind/bounds/choices/default. Two spaces with equal
+        signatures encode any config to bit-identical rows, so observations
+        may be transferred between their tuners; fleet transfer refuses
+        imports across differing signatures."""
+        payload = {
+            "types": list(self.type_names),
+            "cols": [
+                [col, owner, p.kind, p.low, p.high, [repr(c) for c in p.choices],
+                 repr(p.default)]
+                for col, owner, p in self._cols
+            ],
+        }
+        blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
 
     def _require_type(self, index_type: str) -> str:
         if index_type not in self.index_types:

@@ -76,6 +76,9 @@ class Observation:
     eval_time: float
     failed: bool = False
     bootstrap: bool = False
+    # GP observation-noise variance multiplier; > 1 for observations imported
+    # from another tenant's ledger (fleet transfer), 1.0 for local measurements
+    noise_scale: float = 1.0
 
     @property
     def index_type(self) -> str:
@@ -83,7 +86,7 @@ class Observation:
 
     # --- serialization (JSON-compatible) --------------------------------
     def to_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "iteration": int(self.iteration),
             "config": dict(self.config),
             "y": [float(v) for v in np.asarray(self.y).ravel()],
@@ -93,6 +96,9 @@ class Observation:
             "failed": bool(self.failed),
             "bootstrap": bool(self.bootstrap),
         }
+        if self.noise_scale != 1.0:  # keep pre-fleet checkpoints byte-identical
+            d["noise_scale"] = float(self.noise_scale)
+        return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Observation":
@@ -105,6 +111,7 @@ class Observation:
             eval_time=float(d["eval_time"]),
             failed=bool(d["failed"]),
             bootstrap=bool(d["bootstrap"]),
+            noise_scale=float(d.get("noise_scale", 1.0)),
         )
 
 
@@ -361,13 +368,13 @@ class _WarmGPMixin:
         self.gp_warm_fit_steps = gp_warm_fit_steps
         self._gp_warm: Optional[GPParams] = None
 
-    def _fit_gp(self, X, Y, fit_steps: int = 120) -> GP:
+    def _fit_gp(self, X, Y, fit_steps: int = 120, noise_scale=None) -> GP:
         gp = GP(
             seed=int(self.rng.integers(2**31)),
             fit_steps=fit_steps,
             warm_fit_steps=self.gp_warm_fit_steps,
         )
-        gp.fit(X, Y, init=self._gp_warm if self.warm_start else None)
+        gp.fit(X, Y, init=self._gp_warm if self.warm_start else None, noise_scale=noise_scale)
         if self.warm_start:
             self._gp_warm = gp.params  # kept on device; serialized lazily
         return gp
@@ -476,7 +483,11 @@ class VDTuner(_WarmGPMixin, TunerBase):
         # --- NPI normalization + holistic surrogate (lines 15–18) ------
         mode = "balanced" if self.rlim is None else "max"
         Yn, bases = npi_normalize(Y, types, mode=mode)
-        gp = self._fit_gp(self.X_enc, Yn, fit_steps=self.gp_fit_steps)
+        scales = np.array([o.noise_scale for o in self.history], np.float32)
+        gp = self._fit_gp(
+            self.X_enc, Yn, fit_steps=self.gp_fit_steps,
+            noise_scale=scales if np.any(scales != 1.0) else None,
+        )
 
         # --- poll next index type & recommend (lines 19–21) ------------
         t = self._next_poll_type()

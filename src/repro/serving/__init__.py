@@ -16,7 +16,12 @@ Three pieces close the loop between serving and tuning:
 
 See README "Serving control plane".
 """
-from .controller import ControllerParams, GidMappedVDMS, ServingController
+from .controller import (
+    ControllerParams,
+    GidMappedVDMS,
+    ServingController,
+    mirror_count,
+)
 from .metrics import (
     DEFAULT_BUCKETS,
     UNIT_BUCKETS,
@@ -52,6 +57,7 @@ __all__ = [
     "attach_sharded",
     "attach_straggler",
     "ledger_table",
+    "mirror_count",
     "observe_sharded_stats",
     "observe_stats",
     "percentiles",

@@ -29,8 +29,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
-import math
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -121,6 +120,21 @@ class GidMappedVDMS:
         return self._gid_of[local].astype(np.int64)
 
 
+def mirror_count(credit: float, fraction: float, n: int) -> Tuple[int, float]:
+    """Exact deterministic mirror subsample for one canary flush.
+
+    Accumulates ``fraction * n`` mirror credit, mirrors the integer part and
+    carries the fractional remainder to the next flush — so over many small
+    flushes the mirrored share converges to ``fraction`` exactly, instead of
+    per-flush ceil-rounding (which on small flushes mirrors everything
+    regardless of the configured fraction). ``fraction=1.0`` reduces to
+    ``(n, 0.0)`` exactly.
+    """
+    total = credit + fraction * n
+    m = int(total)
+    return m, total - m
+
+
 @dataclasses.dataclass(frozen=True)
 class ControllerParams:
     """Control-loop knobs (op counts are trace operations, not seconds)."""
@@ -132,6 +146,7 @@ class ControllerParams:
     min_window_searches: int = 12  # skip retune when the window has no signal
     canary_queries: int = 48  # mirrored queries before promote-or-rollback
     traffic_mirror: float = 1.0  # fraction of each canary flush mirrored
+    canary_feedback: bool = True  # tell both arms' live measurements to the tuner
     alpha: float = 1.0  # ingest weight in the promotion score
     min_win_margin: float = 0.0  # candidate must beat primary by this rel. margin
     build_amortize_queries: int = 10_000  # horizon the shadow build is amortized over
@@ -164,6 +179,9 @@ class _Canary:
         self.snapshot = snapshot
         self.started_op = op
         self.mirrored = 0
+        # fractional-mirror accumulator: traffic_mirror * flush_size credit
+        # carries across flushes so small flushes don't round up to 100%
+        self.mirror_credit = 0.0
         self.primary_lat: List[float] = []
         self.shadow_lat: List[float] = []
         self.primary_recall: List[float] = []
@@ -206,6 +224,9 @@ class ServingController:
         seed: int = 0,
         trace_minutes: float = 60.0,
         compact_threshold: float = 0.3,
+        outcome_hook: Optional[
+            Callable[[str, Dict[str, Any], Dict[str, Any]], None]
+        ] = None,
     ):
         self.slo = slo
         self.session = session
@@ -216,6 +237,9 @@ class ServingController:
         self.seed = int(seed)
         self.trace_minutes = float(trace_minutes)
         self.compact_threshold = float(compact_threshold)
+        # optional (kind, config, raw) callback fired after each canary
+        # decision — the fleet ledger's promote/rollback outcome feed
+        self.outcome_hook = outcome_hook
         self.monitor = SLOMonitor(slo)
         self.timeline: List[Dict[str, Any]] = []
         self.n_retunes = 0
@@ -410,10 +434,23 @@ class ServingController:
                 c_score[0] == p_score[0]
                 and c_score[1] > p_score[1] * (1.0 + p.min_win_margin)
             )
+            incumbent = dict(config)
             if wins:
                 promote(c, op_i, t, p_score, c_score)
+                outcome = "promote"
             else:
                 rollback(c, op_i, t, p_score, c_score)
+                outcome = "rollback"
+            # feed both arms' live measurements into the tuner as external
+            # tells — after promote/rollback, so a rollback's checkpoint
+            # restore cannot wipe them; bootstrap=True keeps these free
+            # byproducts of serving out of the fresh-evaluation budget
+            # (they feed the GP and fronts, not the recommend/eval ledger)
+            if p.canary_feedback and self.session is not None:
+                self.session.tell(incumbent, dict(p_raw), bootstrap=True)
+                self.session.tell(dict(c.shadow.config), dict(c_raw), bootstrap=True)
+            if self.outcome_hook is not None:
+                self.outcome_hook(outcome, dict(c.shadow.config), dict(c_raw))
             canary = None
 
         def flush(op_i: int) -> None:
@@ -462,7 +499,11 @@ class ServingController:
                 ):
                     abort_canary(op_i, t_now, "primary_fault")
                     return
-                m = int(math.ceil(p.traffic_mirror * rows.size))
+                m, canary.mirror_credit = mirror_count(
+                    canary.mirror_credit, p.traffic_mirror, rows.size
+                )
+                if m == 0:
+                    return  # mirror credit carries into the next flush
                 try:
                     s_ids, _ = canary.shadow.search(q[:m], k, mode=self.mode)
                 except FaultError:

@@ -14,12 +14,21 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
+import numpy as np
+
 from ..core.objectives import TuningFailure
 from .datasets import VectorDataset
 from .engine import VDMSInstance, batch_signature, measure_batch
 from .faults import FaultInjector, FaultPlan, classify_eval_error
 from .registry import make_space  # noqa: F401  (registry-derived; re-exported)
-from .workload import WorkloadTrace, replay_trace, time_aware_ground_truth
+from .workload import (
+    OP_DELETE,
+    OP_INSERT,
+    OP_SEARCH,
+    WorkloadTrace,
+    replay_trace,
+    time_aware_ground_truth,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +128,47 @@ class VDMSTuningEnv:
         if not 0 <= phase < len(self._phases):
             raise ValueError(f"phase must be in [0, {len(self._phases)}), got {phase}")
         self._phase = int(phase)
+
+    # ------------------------------------------------------------------
+    # fleet descriptor view (what an evaluation right now would measure)
+    # ------------------------------------------------------------------
+    def current_workload(self) -> Tuple[str, Union[WorkloadTrace, VectorDataset]]:
+        """``("streaming", active-phase trace)`` or ``("static", dataset)``.
+
+        Fleet :class:`~repro.fleet.descriptor.WorkloadDescriptor`s are
+        computed from this view, so tenant similarity tracks the workload the
+        tuner is *currently* being scored against (phase-advanced streaming
+        tenants re-describe automatically).
+        """
+        if self.workload == "streaming":
+            return "streaming", self._phases[self._phase]
+        return "static", self.dataset
+
+    def workload_stats(self) -> Dict[str, float]:
+        """Scalar statistics of the current workload view: dimensionality,
+        corpus size, top-k, and the operation arrival mix — the raw
+        ingredients of a fleet workload descriptor."""
+        kind, w = self.current_workload()
+        if kind == "streaming":
+            n_ops = max(w.n_ops, 1)
+            return {
+                "dim": float(w.dim),
+                "k": float(w.k),
+                "corpus": float(w.capacity),
+                "n_queries": float(w.n_searches),
+                "insert_frac": float(np.sum(w.kinds == OP_INSERT)) / n_ops,
+                "search_frac": float(np.sum(w.kinds == OP_SEARCH)) / n_ops,
+                "delete_frac": float(np.sum(w.kinds == OP_DELETE)) / n_ops,
+            }
+        return {
+            "dim": float(w.dim),
+            "k": float(w.k),
+            "corpus": float(w.n),
+            "n_queries": float(w.queries.shape[0]),
+            "insert_frac": 0.0,
+            "search_frac": 1.0,
+            "delete_frac": 0.0,
+        }
 
     def _cache_key(self, cfg: Dict[str, Any]) -> Tuple:
         key = self._canon(cfg)

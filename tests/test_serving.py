@@ -18,6 +18,7 @@ from repro.serving import (
     observe_stats,
     serving_ledger,
 )
+from repro.serving.controller import mirror_count
 from repro.vdms import LiveVDMS, VDMSTuningEnv, make_space, make_trace
 from repro.vdms.workload import time_aware_ground_truth
 
@@ -250,7 +251,7 @@ def test_losing_canary_rolls_back_bit_identical():
         params=ControllerParams(
             check_every=24, canary_queries=16, retune_iters=4,
             retune_window_ops=128, cooldown_ops=48, min_window_searches=8,
-            repair_anchors=False, floor_margin=0.0,
+            repair_anchors=False, floor_margin=0.0, canary_feedback=False,
         ),
         seed=2,
     )
@@ -264,6 +265,80 @@ def test_losing_canary_rolls_back_bit_identical():
     assert session.state_dict() == state_before
     assert session.backend is backend_before
     assert [e["event"] for e in report["timeline"] if e["event"] == "rollback"]
+
+
+def test_mirror_count_honors_fraction_on_small_flushes():
+    # regression: ceil-rounding mirrored EVERYTHING on small flushes — at
+    # fraction 0.25 a stream of 3-query flushes must mirror ~1/4, not all
+    credit, mirrored, total = 0.0, 0, 0
+    for _ in range(40):
+        m, credit = mirror_count(credit, 0.25, 3)
+        mirrored += m
+        total += 3
+    assert mirrored == int(0.25 * total)  # exact: credit carries, never ceils
+    # fraction 1.0 reduces to the legacy everything-mirrored path exactly
+    assert mirror_count(0.0, 1.0, 7) == (7, 0.0)
+    # a flush smaller than 1/fraction mirrors nothing and banks the credit
+    m, credit = mirror_count(0.0, 0.1, 3)
+    assert m == 0 and credit == pytest.approx(0.3)
+
+
+def test_fractional_mirror_still_reaches_decisions():
+    trace = _drifted_trace(n_base=400, n_ops=260, seed=2)
+    session, _ = _served_session(trace, n_pre_ops=100, n_iters=4, seed=2)
+    cfg = dict(LIVE_CFG, index_type="FLAT", graceful_time=0.4)
+    slo = SLOSpec(recall_floor=0.999, min_samples=8)
+    ctrl = ServingController(
+        slo, session=session,
+        params=ControllerParams(
+            check_every=24, canary_queries=8, retune_iters=4,
+            retune_window_ops=128, cooldown_ops=48, min_window_searches=8,
+            repair_anchors=False, floor_margin=0.0, canary_feedback=False,
+            traffic_mirror=0.5,
+        ),
+        seed=2,
+    )
+    report = ctrl.serve(trace, cfg, guard=True)
+    # mirroring half the traffic still accumulates enough mirrored queries
+    # to reach promote-or-rollback decisions
+    assert report["n_promotes"] + report["n_rollbacks"] > 0
+
+
+def test_canary_feedback_feeds_gp_outside_budget():
+    trace = _drifted_trace(n_base=400, n_ops=260, seed=2)
+    session, _ = _served_session(trace, n_pre_ops=100, n_iters=4, seed=2)
+    cfg = dict(LIVE_CFG, index_type="FLAT", graceful_time=0.4)
+    slo = SLOSpec(recall_floor=0.999, min_samples=8)
+    n_obs_before = session.n_observations
+    hist_before = len(session.tuner.history)
+    outcomes = []
+    ctrl = ServingController(
+        slo, session=session,
+        params=ControllerParams(
+            check_every=24, canary_queries=16, retune_iters=4,
+            retune_window_ops=128, cooldown_ops=48, min_window_searches=8,
+            repair_anchors=False, floor_margin=0.0,
+        ),
+        seed=2,
+        outcome_hook=lambda kind, c, raw: outcomes.append((kind, c, raw)),
+    )
+    report = ctrl.serve(trace, cfg, guard=True)
+    decisions = report["n_promotes"] + report["n_rollbacks"]
+    assert decisions > 0
+    # every decision told BOTH arms' live measurements into the tuner; with
+    # all canaries losing, the rollback restore wiped the retune evals so
+    # exactly the feedback rows survive
+    assert report["n_promotes"] == 0
+    fed = session.tuner.history[hist_before:]
+    assert len(fed) == 2 * decisions
+    assert all(o.bootstrap and not o.failed for o in fed)
+    assert all({"speed", "recall"} <= set(o.raw) for o in fed)
+    # free byproducts of serving: the fresh-evaluation budget is untouched
+    assert session.n_observations == n_obs_before
+    # the outcome hook saw each decision with the candidate's measurements
+    assert [k for k, _, _ in outcomes].count("rollback") == report["n_rollbacks"]
+    assert len(outcomes) == decisions
+    assert all({"speed", "recall"} <= set(raw) for _, _, raw in outcomes)
 
 
 def test_breach_triggers_canary_and_promotion_repairs_recall():
